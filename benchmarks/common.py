@@ -1,0 +1,35 @@
+"""Shared benchmark utilities: timing, CSV emit, tiny ASCII plots."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timed(fn, *args, iters: int = 5, warmup: int = 2, **kw):
+    """Median wall-clock microseconds per call (CPU-indicative only)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, value, derived: str = ""):
+    """One CSV row: name,value,derived."""
+    print(f"{name},{value},{derived}")
+
+
+def bar(label: str, value: float, vmax: float, width: int = 40,
+        suffix: str = ""):
+    n = int(width * value / max(vmax, 1e-30))
+    print(f"  {label:<22s} {'#' * n}{' ' * (width - n)} {value:10.3f}{suffix}")
+
+
+def section(title: str):
+    print(f"\n=== {title} " + "=" * max(8, 68 - len(title)))

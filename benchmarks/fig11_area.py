@@ -1,0 +1,40 @@
+"""Fig. 11 reproduction: area overhead with breakdown (expect ~10x saving
+vs conventional SC; SNG is 95 % of SC area; LUT shrinks at 8-bit)."""
+
+from __future__ import annotations
+
+from benchmarks.common import bar, emit, section
+from repro.core import costmodel as cm
+
+
+def main():
+    section("Fig 11: area overhead (um^2)")
+    a_apc, bd_apc = cm.area_scpim(10, "apc")
+    a_csa, bd_csa = cm.area_scpim(10, "csa")
+    a_sc, bd_sc = cm.area_sc(10)
+    a_pim, bd_pim = cm.area_pim(10)
+    rows = {"SC+PIM (APC)": a_apc, "SC+PIM (CSA)": a_csa,
+            "SC": a_sc, "PIM": a_pim}
+    vmax = max(rows.values())
+    for name, a in rows.items():
+        bar(name, a, vmax, suffix=" um2")
+        emit(f"fig11.area_um2.{name}", round(a, 1), "")
+    emit("fig11.sc_over_scpim", round(a_sc / a_apc, 2),
+         "paper: ~one order of magnitude")
+
+    section("Fig 11: breakdowns")
+    for k, v in bd_apc.items():
+        emit(f"fig11.breakdown.scpim.{k}", round(v, 1),
+             "LUT comparable to DTC+APC at 10-bit")
+    for k, v in bd_sc.items():
+        emit(f"fig11.breakdown.sc.{k}", round(v, 1), "SNG = 95%")
+
+    # LUT scaling with operand width (the 8-bit remark in §V-D)
+    for bits in (8, 10, 12):
+        _, bd = cm.area_scpim(bits, "apc")
+        emit(f"fig11.lut_um2.bits={bits}", round(bd["lut"], 1),
+             "exponential in bit length")
+
+
+if __name__ == "__main__":
+    main()

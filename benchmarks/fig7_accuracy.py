@@ -1,0 +1,60 @@
+"""Fig. 7 reproduction: (a) MUL error distribution at nbit=1000 (expect
+Gaussian, zero-centered, sigma ~ 1.6 %); (b) sigma vs nbit and vs tau_Y."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bar, emit, section
+from repro.core import engine
+
+TAU_X, TAU_Y = 0.3, 0.4
+ITERS = 1000
+
+
+def _sigma(key, nbit: int, tau_y: float = TAU_Y, iters: int = ITERS):
+    cfg = engine.EngineConfig(nbit=nbit)
+    keys = jax.random.split(key, iters)
+    p = jax.vmap(lambda k: engine.readout(
+        engine.sc_multiply_states(k, TAU_X, tau_y, cfg)))(keys)
+    return p
+
+
+def main(key=None):
+    key = key if key is not None else jax.random.PRNGKey(42)
+
+    section("Fig 7a: error distribution, nbit=1000, tau_X=0.3ns tau_Y=0.4ns")
+    p = _sigma(key, 1000)
+    p_true = float(np.exp(-(TAU_X + TAU_Y)))
+    err = np.asarray(p) - p_true
+    sigma = float(err.std())
+    emit("fig7a.sigma_pct", round(sigma * 100, 3), "paper: ~1.6%")
+    emit("fig7a.mean_bias_pct", round(float(err.mean()) * 100, 4),
+         "paper: zero-centered")
+    # ASCII histogram (the Gaussian shape check)
+    hist, edges = np.histogram(err, bins=17, range=(-0.06, 0.06))
+    for h, lo in zip(hist, edges[:-1]):
+        bar(f"{lo * 100:+.1f}%", float(h), float(hist.max()))
+    # Gaussian fit quality: compare to the binomial prediction
+    pred = float(np.sqrt(p_true * (1 - p_true) / 1000))
+    emit("fig7a.binomial_prediction_pct", round(pred * 100, 3),
+         "sqrt(p(1-p)/n)")
+
+    section("Fig 7b: sigma vs nbit (at tau_Y=0.4)")
+    for i, nbit in enumerate((128, 256, 512, 1024, 2048, 4096)):
+        s = float(np.asarray(_sigma(jax.random.fold_in(key, i), nbit,
+                                    iters=600)).std())
+        emit(f"fig7b.sigma_pct.nbit={nbit}", round(s * 100, 3),
+             "expect ~1/sqrt(nbit)")
+
+    section("Fig 7b: sigma vs tau_Y (nbit=1000) — expect ~flat")
+    for j, tau_y in enumerate((0.1, 0.2, 0.3, 0.4, 0.6, 0.8)):
+        s = float(np.asarray(_sigma(jax.random.fold_in(key, 100 + j), 1000,
+                                    tau_y, iters=600)).std())
+        emit(f"fig7b.sigma_pct.tau_y={tau_y}", round(s * 100, 3), "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Fig. 8 reproduction: robustness to hardware variance.
+
+(a) MUL uncertainty vs sigma(I_c) 0-10 % — expect flat.
+(b) MUL uncertainty vs sigma(Circuits) for SC+PIM vs logarithm multiplier —
+    expect SC+PIM flat, log-mult degrading sharply.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, section
+from repro.core import engine, variance
+
+X, Y = 400, 700
+CFG = engine.EngineConfig(nbit=1024)
+ITERS = 600
+
+
+def _sweep(key, fn, sigmas):
+    out = {}
+    for i, s in enumerate(sigmas):
+        keys = jax.random.split(jax.random.fold_in(key, i), ITERS)
+        p = jax.vmap(lambda k: fn(k, s))(keys)
+        out[s] = float(jnp.std(p))
+    return out
+
+
+def main(key=None):
+    key = key if key is not None else jax.random.PRNGKey(7)
+
+    section("Fig 8a: sigma(MUL) vs sigma(I_c) — SC+PIM")
+    ic = _sweep(key, lambda k, s: variance.sc_mul_with_ic_variance(
+        k, X, Y, CFG, s), (0.0, 0.02, 0.04, 0.06, 0.08, 0.10))
+    for s, v in ic.items():
+        emit(f"fig8a.sigma_pct.ic={int(s * 100)}%", round(v * 100, 3),
+             "paper: ~flat")
+
+    section("Fig 8b: sigma(MUL) vs sigma(Circuits) — SC+PIM vs log-mult")
+    sc = _sweep(jax.random.fold_in(key, 1),
+                lambda k, s: variance.sc_mul_with_circuit_variance(
+                    k, X, Y, CFG, s), (0.04, 0.06, 0.08, 0.10))
+    lm = _sweep(jax.random.fold_in(key, 2),
+                lambda k, s: variance.log_multiplier(k, X, Y, CFG.conv, s),
+                (0.04, 0.06, 0.08, 0.10))
+    for s in sc:
+        emit(f"fig8b.scpim_sigma_pct.circ={int(s * 100)}%",
+             round(sc[s] * 100, 3), "paper: ~flat")
+    for s in lm:
+        emit(f"fig8b.logmult_sigma_pct.circ={int(s * 100)}%",
+             round(lm[s] * 100, 3), "paper: degrades sharply")
+    emit("fig8b.logmult_over_scpim_at_10pct",
+         round(lm[0.10] / sc[0.10], 2), "log-mult >> SC at high variance")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig. 9 reproduction: (a) cycles per MUL across designs (expect ~4x vs SC,
+~18x vs PIM at 10-bit); (b) cycles vs operand bit length."""
+
+from __future__ import annotations
+
+from benchmarks.common import bar, emit, section
+from repro.core import costmodel as cm
+
+
+def main():
+    section("Fig 9a: cycle count per 10-bit MUL")
+    rows = {
+        "SC+PIM (APC)": cm.cycles_scpim_apc(10),
+        "SC+PIM (CSA)": cm.cycles_scpim_csa(10, 100),
+        "SC": cm.cycles_sc(10),
+        "PIM": cm.cycles_pim(10),
+    }
+    vmax = max(rows.values())
+    for name, c in rows.items():
+        bar(name, c, vmax, suffix=" cycles")
+        emit(f"fig9a.cycles.{name}", round(c, 2), "")
+    r = cm.headline_ratios(10)
+    emit("fig9a.speedup_vs_sc", round(r["speedup_vs_sc"], 2), "paper: ~4x")
+    emit("fig9a.speedup_vs_pim", round(r["speedup_vs_pim"], 2), "paper: 18x")
+
+    section("Fig 9b: MUL cycles vs operand bit length")
+    for bits in (4, 6, 8, 10, 12, 14, 16):
+        ours = cm.cycles_scpim_apc(bits)
+        pim = cm.cycles_pim(bits)
+        emit(f"fig9b.scpim.bits={bits}", round(ours, 1),
+             "flat-ish (parallel stochastic bits)")
+        emit(f"fig9b.pim.bits={bits}", pim, "grows super-linearly")
+
+
+if __name__ == "__main__":
+    main()

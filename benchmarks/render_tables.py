@@ -1,0 +1,42 @@
+"""Render dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.render_tables dryrun_baseline.json
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str, mesh_filter: str | None = None) -> str:
+    with open(path) as f:
+        data = json.load(f)
+    rows = []
+    head = ("| arch | shape | mesh | bound | compute_s | memory_s | "
+            "collective_s | useful | GB/dev |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for r in data["results"]:
+        if "skipped" in r:
+            if mesh_filter in (None, "16x16"):
+                rows.append(f"| {r['arch']} | {r['shape']} | — | SKIP "
+                            "(full attention, documented) | | | | | |")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("total_per_device_gb", float("nan"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {rf['bound']} | "
+            f"{rf['compute_s']:.3f} | {rf['memory_s']:.3f} | "
+            f"{rf['collective_s']:.3f} | {rf['useful_fraction']:.2f} | "
+            f"{mem:.2f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else None
+    print(render(path, mesh))

@@ -1,0 +1,66 @@
+"""Roofline table (§Roofline deliverable): reads the dry-run artifact
+(dryrun_results.json at the repo root, produced by repro.launch.dryrun) and
+prints the three-term roofline per (arch x shape x mesh) with the dominant
+bottleneck and the MODEL_FLOPS/HLO_FLOPs useful fraction.
+
+Run the dry-run first if the artifact is missing:
+    PYTHONPATH=src python -m repro.launch.dryrun --out dryrun_results.json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, section
+
+ARTIFACT_CANDIDATES = ("dryrun_results.json",
+                       os.path.join(os.path.dirname(__file__), "..",
+                                    "dryrun_results.json"))
+
+
+def load():
+    for path in ARTIFACT_CANDIDATES:
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+    return None
+
+
+def main():
+    data = load()
+    section("Roofline per (arch x shape x mesh) — from the dry-run artifact")
+    if data is None:
+        emit("roofline.status", "SKIPPED",
+             "run repro.launch.dryrun first (artifact not found)")
+        return
+    results = data["results"]
+    live = [r for r in results if "roofline" in r]
+    skips = [r for r in results if "skipped" in r]
+    print(f"{'arch':<28}{'shape':<13}{'mesh':<9}{'bound':<11}"
+          f"{'compute_s':>10}{'memory_s':>10}{'coll_s':>10}{'useful':>8}"
+          f"{'GB/dev':>8}")
+    for r in live:
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("total_per_device_gb", float("nan"))
+        print(f"{r['arch']:<28}{r['shape']:<13}{r['mesh']:<9}"
+              f"{rf['bound']:<11}{rf['compute_s']:>10.3f}"
+              f"{rf['memory_s']:>10.3f}{rf['collective_s']:>10.3f}"
+              f"{rf['useful_fraction']:>8.2f}{mem:>8.2f}")
+    for r in skips:
+        print(f"{r['arch']:<28}{r['shape']:<13}{'-':<9}SKIP: {r['skipped'][:40]}")
+    emit("roofline.live_cells", len(live), "")
+    emit("roofline.skipped_cells", len(skips),
+         "full-attention archs x long_500k")
+    emit("roofline.failures", len(data.get("failures", [])), "must be 0")
+
+    bounds = {}
+    for r in live:
+        b = r["roofline"]["bound"]
+        bounds[b] = bounds.get(b, 0) + 1
+    for b, n in sorted(bounds.items()):
+        emit(f"roofline.bound.{b}", n, "cells dominated by this term")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Benchmark driver: one module per paper table/figure, CSV rows
+``name,value,derived`` plus ASCII summaries.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run fig9 fig10 # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig7_accuracy, fig8_variance, fig9_cycles,
+                        fig10_energy, fig11_area, roofline, sc_matmul_bench)
+
+SUITES = {
+    "fig7": fig7_accuracy.main,     # accuracy statistics (paper Fig. 7)
+    "fig8": fig8_variance.main,     # hardware variance (paper Fig. 8)
+    "fig9": fig9_cycles.main,       # performance/cycles (paper Fig. 9)
+    "fig10": fig10_energy.main,     # energy (paper Fig. 10)
+    "fig11": fig11_area.main,       # area (paper Fig. 11)
+    "scmac": sc_matmul_bench.main,  # the SC-MAC framework matmul + roofline
+    "roofline": roofline.main,      # 40-cell dry-run roofline table
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    t0 = time.time()
+    for name in names:
+        if name not in SUITES:
+            print(f"unknown suite {name!r}; have {list(SUITES)}")
+            raise SystemExit(2)
+        SUITES[name]()
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""SC-MAC kernel benchmark: the paper's technique as a framework matmul.
+
+Two views:
+  1. CPU-indicative wall-clock of the three modes (exact / moment via the
+     fused Pallas kernel in interpret mode / bitexact core) — relative cost.
+  2. Analytic TPU roofline of the fused kernel vs the unfused 3-matmul
+     formulation — the fusion is the beyond-paper optimization, tripling
+     arithmetic intensity at equal HBM traffic (§Perf iteration 3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section, timed
+from repro.core import scmac
+from repro.kernels import ops
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
+
+M, K, N = 512, 2048, 512
+NBIT = 1024
+
+
+def analytic_roofline():
+    """SC-MAC kernel variants on one v5e chip (bf16 peak, f32 traffic) —
+    the §Perf cell-3 iteration ladder."""
+    flops = 3 * 2 * M * K * N                     # three dots
+    variants = {
+        # three separate dots re-read operands; mean/sum_p/sum_p2 round-trip
+        "it0_unfused": 4 * (3 * (M * K + K * N) + 4 * M * N + 2 * M * N),
+        # one pass, three VMEM accumulators; noise streamed from HBM
+        "it1_fused": 4 * (M * K + K * N + 2 * M * N),
+        # in-kernel PRNG epilogue: the (M, N) noise input disappears
+        "it2_fused_prng": 4 * (M * K + K * N + M * N),
+    }
+    for name, b in variants.items():
+        compute_s = flops / PEAK_FLOPS_BF16
+        memory_s = b / HBM_BW
+        ai = flops / b
+        bound = "compute" if compute_s > memory_s else "memory"
+        emit(f"scmac.roofline.{name}.arith_intensity", round(ai, 1),
+             f"bound={bound} mem_s={memory_s:.2e} comp_s={compute_s:.2e}")
+    emit("scmac.roofline.fusion_traffic_saving",
+         round(variants["it0_unfused"] / variants["it1_fused"], 2),
+         "fused kernel HBM-traffic advantage")
+    emit("scmac.roofline.prng_traffic_saving",
+         round(variants["it1_fused"] / variants["it2_fused_prng"], 2),
+         "in-kernel PRNG advantage on top of fusion")
+
+
+def main(key=None):
+    key = key if key is not None else jax.random.PRNGKey(3)
+    kx, kw, kk = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+
+    section(f"SC matmul modes, ({M}x{K}) @ ({K}x{N}), nbit={NBIT}")
+    t_exact = timed(lambda: jnp.dot(x, w).block_until_ready())
+    emit("scmac.us.exact", round(t_exact, 1), "plain XLA matmul (CPU)")
+
+    cfg = scmac.SCMacConfig(mode="moment", nbit=NBIT)
+    t_moment = timed(lambda: scmac.sc_matmul(kk, x, w, cfg))
+    emit("scmac.us.moment_core", round(t_moment, 1),
+         f"{t_moment / t_exact:.1f}x exact (3 dots + draw)")
+
+    t_fused = timed(lambda: ops.sc_matmul_fused(
+        kk, x, w, nbit=NBIT, block_m=128, block_n=128, block_k=512))
+    emit("scmac.us.moment_fused_interpret", round(t_fused, 1),
+         "Pallas interpret mode — correctness path, not perf")
+
+    # bitexact on a reduced shape (O(M*K*N) memory)
+    xs, ws = x[:64, :256], w[:256, :64]
+    cfgb = scmac.SCMacConfig(mode="bitexact", nbit=NBIT)
+    t_bit = timed(lambda: scmac.sc_matmul(kk, xs, ws, cfgb))
+    t_exact_s = timed(lambda: jnp.dot(xs, ws).block_until_ready())
+    emit("scmac.us.bitexact_64x256x64", round(t_bit, 1),
+         f"{t_bit / max(t_exact_s, 1e-9):.0f}x exact — the O(nbit) cost the "
+         "moment mode removes")
+
+    section("Analytic v5e roofline: fused vs unfused SC-MAC")
+    analytic_roofline()
+
+
+if __name__ == "__main__":
+    main()

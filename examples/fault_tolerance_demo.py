@@ -1,0 +1,64 @@
+"""Fault-tolerance demo: train with an injected worker crash, recover from
+the latest checkpoint, and verify the run converges to the exact same state
+as an uninterrupted run (deterministic data pipeline + checkpoint replay).
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+
+from __future__ import annotations
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMData, make_batch
+from repro.ft import FaultInjector, Supervisor
+from repro.train import TrainConfig, make_train_step
+from repro.train.step import train_state_init
+
+STEPS, CKPT_EVERY, FAIL_AT = 20, 5, 13
+
+
+def train(tag: str, ckpt_dir: str, injector=None):
+    cfg = get_smoke_config("qwen2-0.5b").replace(
+        param_dtype=jnp.float32, act_dtype=jnp.float32)
+    tcfg = TrainConfig()
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    state = train_state_init(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    sup = Supervisor(ckpt_dir=ckpt_dir, ckpt_every=CKPT_EVERY,
+                     injector=injector)
+    state, hist = sup.run(state, step, STEPS,
+                          make_batch=lambda i: make_batch(data, i))
+    print(f"[{tag}] final loss {hist['loss'][-1]:.4f}, "
+          f"recoveries: {hist['recoveries']}")
+    return state, hist
+
+
+def main():
+    for d in ("/tmp/ft_demo_clean", "/tmp/ft_demo_crash"):
+        shutil.rmtree(d, ignore_errors=True)
+
+    print(f"run A: {STEPS} uninterrupted steps")
+    clean, _ = train("clean", "/tmp/ft_demo_clean")
+
+    print(f"\nrun B: crash injected at step {FAIL_AT} "
+          f"(checkpoint every {CKPT_EVERY})")
+    crashed, hist = train("crash", "/tmp/ft_demo_crash",
+                          FaultInjector(fail_at_steps=(FAIL_AT,)))
+    assert len(hist["recoveries"]) == 1
+
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         clean["params"], crashed["params"])
+    worst = max(jax.tree.leaves(diffs))
+    print(f"\nmax |param(clean) - param(crashed)| = {worst:.2e}")
+    assert worst == 0.0, "recovery must replay to the identical state"
+    print("recovered run is BIT-IDENTICAL to the uninterrupted run — "
+          "checkpoint/restart + deterministic data = exact recovery")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    latest_step, restore, restore_resharded, save)

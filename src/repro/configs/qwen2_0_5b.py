@@ -1,0 +1,20 @@
+"""qwen2-0.5b [dense]: GQA with QKV bias; tied embeddings.
+
+24L, d_model=896, 14 heads (GQA kv=2), d_ff=4864 (SwiGLU), vocab=151936.
+Primary SC-engine demo arch (small enough to train with sc_mode="moment"
+end-to-end on CPU). [arXiv:2407.10671; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense", n_layers=24, d_model=896,
+    n_heads=14, n_kv_heads=2, d_ff=4864, vocab=151936, qkv_bias=True,
+    tie_embeddings=True,
+    # 14 heads do not divide the 16-way TP axis -> context-parallel
+    # attention; 2048-token chunks keep the PER-DEVICE q-tile at 128 rows
+    # (MXU-aligned) instead of 64 (EXPERIMENTS &Perf cell-2 iteration 1).
+    attn_chunk=2048)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab=256,
+    attn_impl="full", remat="none")

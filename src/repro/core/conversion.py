@@ -1,0 +1,105 @@
+"""Data conversion chain (paper Eq. 4 and §III-A).
+
+    X(binary) --LUT--> ln(X)(binary) --DTC--> tau_X (time) --MRAM--> stochastic
+    --popcount--> X*Y (binary)
+
+Hardware-faithful pieces modeled here:
+
+* **LUT logarithm** (§III-A): an ``n``-bit operand indexes a 2^n-entry table of
+  pre-computed ``-ln(X / 2^n)`` values, themselves quantized to a fixed-point
+  grid. We model the table explicitly (it is also what the area model charges
+  for in Fig. 11).
+* **DTC** (digital-to-time converter, ref [19]): emits a voltage pulse whose
+  duration is the LUT output; 22 ps resolution → every tau is quantized to a
+  multiple of ``DTC_RESOLUTION_NS``.
+
+Probability encoding: an unsigned n-bit operand ``X`` maps to
+``P_X = X / 2^n ∈ [0, 1)``. Signed operands are handled at the scmac level via
+sign/magnitude split (the paper only treats unsigned operands).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import physics
+
+DTC_RESOLUTION_NS = 0.022  # 22 ps (paper §V-A, ref [19])
+
+
+@dataclasses.dataclass(frozen=True)
+class ConversionConfig:
+    n_bits: int = 10                  # operand bit width (paper evaluates 10-bit)
+    dtc_resolution_ns: float = DTC_RESOLUTION_NS
+    lut_fixedpoint_bits: int = 16     # fixed-point width of the stored -ln values
+    max_tau_ns: float = 16.0          # DTC full-scale range
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.n_bits
+
+
+def encode_probability(x_int, cfg: ConversionConfig):
+    """n-bit unsigned integer -> survival probability P = X / 2^n."""
+    return jnp.asarray(x_int, jnp.float32) / cfg.levels
+
+
+def decode_probability(p, cfg: ConversionConfig):
+    """Probability estimate -> nearest n-bit integer (the pop-count readout)."""
+    return jnp.clip(jnp.round(p * cfg.levels), 0, cfg.levels - 1).astype(jnp.int32)
+
+
+def build_lut(cfg: ConversionConfig) -> jnp.ndarray:
+    """The -ln LUT actually stored in hardware: entry[i] = -ln(i / 2^n), quantized.
+
+    Entry 0 (P = 0) is clamped to the DTC full-scale pulse — a maximal pulse
+    switches the bit (almost) deterministically, representing multiply-by-zero.
+    """
+    i = jnp.arange(cfg.levels, dtype=jnp.float32)
+    p = jnp.where(i == 0, 1.0, i) / cfg.levels          # placeholder for i=0
+    tau = -jnp.log(p)
+    tau = jnp.where(i == 0, cfg.max_tau_ns, tau)
+    # Fixed-point quantization of the table contents.
+    scale = (1 << cfg.lut_fixedpoint_bits) / cfg.max_tau_ns
+    tau_q = jnp.round(tau * scale) / scale
+    return tau_q.astype(jnp.float32)
+
+
+def dtc_quantize(tau_ns, cfg: ConversionConfig):
+    """DTC emits pulses on a 22 ps grid, saturating at full scale."""
+    res = cfg.dtc_resolution_ns
+    tau = jnp.clip(jnp.asarray(tau_ns), 0.0, cfg.max_tau_ns)
+    return jnp.round(tau / res) * res
+
+
+@partial(jax.jit, static_argnums=(1,))
+def operand_to_tau(x_int, cfg: ConversionConfig):
+    """Full §III-A chain: n-bit integer -> LUT lookup -> DTC-quantized pulse."""
+    lut = build_lut(cfg)
+    tau = lut[jnp.asarray(x_int, jnp.int32)]
+    return dtc_quantize(tau, cfg)
+
+
+def tau_to_probability(tau_ns, *, i_ua=physics.I_C_UA):
+    """What the device does with the pulse (Eq. 3 at the operating current)."""
+    return physics.p_unswitched(tau_ns, i_ua)
+
+
+def ideal_product_probability(x_int, y_int, cfg: ConversionConfig):
+    """Reference: P_X * P_Y with no LUT/DTC quantization (float math)."""
+    return encode_probability(x_int, cfg) * encode_probability(y_int, cfg)
+
+
+def quantized_product_probability(x_int, y_int, cfg: ConversionConfig):
+    """P_usw(tau_X) * P_usw(tau_Y) including LUT fixed-point + DTC quantization.
+
+    This is the *deterministic* part of the hardware error (bias); the
+    stochastic part (binomial sampling noise) comes from the engine.
+    """
+    px = tau_to_probability(operand_to_tau(x_int, cfg))
+    py = tau_to_probability(operand_to_tau(y_int, cfg))
+    return px * py

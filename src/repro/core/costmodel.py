@@ -1,0 +1,234 @@
+"""Analytical cycle / energy / area model (paper §V, Figs. 9-11).
+
+The paper evaluates four designs on 10-bit × 10-bit MUL (2^10 stochastic bits):
+
+  * SC+PIM (APC)  — this work, pop-count via one-cycle APC
+  * SC+PIM (CSA)  — this work, pop-count via in-memory CSA+FA, amortized
+                    over a 100-MUL MAC
+  * SC            — conventional stochastic computing with the
+                    state-of-the-art SNG [21] + APC pop-count
+  * PIM           — MUL from in-memory bitwise Boolean ops only (DRISA [6])
+
+Like the paper (which has no silicon), this is an *analytical* model built
+from published component anchors, with the remaining free constants
+calibrated so the published headline ratios emerge:
+
+  anchors: DRISA 143 cycles @ 8-bit MUL, quadratic shift-add scaling;
+           DTC: 22 ps resolution, 75×25 µm² [19]; APC one cycle [16];
+           SNG = 95 % of conventional-SC area [21]; SC energy 88 % buffering;
+  headlines reproduced: ≈4× cycles vs SC, ≈18× vs PIM (10-bit),
+           ≈58 % energy saving vs SC, ≈10× area saving vs SC.
+
+Every constant is a named module-level knob so the benchmarks can sweep them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import popcount
+
+# --------------------------- cycle-model knobs ------------------------------
+ROW_LENGTH = 256                  # cross-point row cells (IR-drop limit, §III-D)
+SA_READ_CYCLES = 2                # sense + latch, parallel across subarray banks
+BANK_MERGE_PER_LEVEL = 1          # adder-tree merge of per-bank APC counts
+PRESET_CYCLES = 1                 # strong reverse pulse, all rows parallel
+PULSE_CYCLES = 1                  # one stochastic write pulse (row-parallel)
+SNG_BITS_PER_CYCLE = 128          # LFSR bank width of the SNG [21]
+SNG_SHUFFLE_FACTOR = 2.0          # decorrelation shuffle (both streams) [21]
+DRISA_8BIT_CYCLES = 143           # DRISA anchor [6] — the paper's PIM baseline
+
+# --------------------------- energy-model knobs (pJ) ------------------------
+R_HML_OHM = 250.0                 # heavy-metal-layer write-path resistance
+I_C_A = 80e-6                     # critical current
+PULSE_TAU_NS = 0.5                # mean stochastic pulse duration (P≈0.5 range)
+PRESET_TAU_NS = 3.0               # preset pulse duration
+PRESET_I_FACTOR = 1.25            # preset over-drive
+DTC_ENERGY_PJ = 0.2               # per conversion [19]
+LUT_READ_PJ = 0.1                 # per lookup
+APC_ENERGY_PJ = 0.5               # per pop-count
+CSA_OP_PJ = 0.05                  # per in-memory bulk bitwise op
+SRAM_BUFFER_PJ_PER_BIT = 0.0108   # conventional-SC bitstream buffering
+SNG_GEN_PJ_PER_BIT = 0.0012       # SNG generation energy [21]
+PIM_OP_PJ = 0.10                  # DRISA bulk bitwise op energy
+
+# --------------------------- area-model knobs (µm²) -------------------------
+DTC_AREA_UM2 = 75.0 * 25.0        # [19]
+APC_AREA_UM2 = 2100.0             # synthesized 45 nm FreePDK, params from [16]
+AND_BUFFER_AREA_UM2 = 700.0       # conventional SC AND array + latches
+SNG_AREA_FRACTION = 0.95          # SNG share of conventional SC area [21]
+MRAM_CELL_AREA_UM2 = 0.10         # LUT storage cell
+PIM_LOGIC_AREA_UM2 = 1500.0       # DRISA-style added subarray logic
+
+
+@dataclasses.dataclass(frozen=True)
+class MulCost:
+    cycles: float
+    energy_pj: float
+    area_um2: float
+    breakdown: dict
+
+
+def _rows(n_bits: int) -> int:
+    return -(-(1 << n_bits) // ROW_LENGTH)
+
+
+# ---------------------------------------------------------------------------
+# Cycles (Fig. 9)
+# ---------------------------------------------------------------------------
+
+
+def cycles_scpim_apc(n_bits: int = 10) -> float:
+    """This work, APC pop-count. LUT+DTC conversion is pipelined (§III-D).
+
+    The 2^n stochastic bits live in ``rows`` sub-array rows written AND
+    sensed in parallel (each bank has its own SAs — the multi-row activation
+    of §III-D); per-bank APC counts merge through a log-depth adder tree.
+    This is what makes Fig. 9b ~flat in operand bit length."""
+    rows = _rows(n_bits)
+    merge = BANK_MERGE_PER_LEVEL * math.ceil(math.log2(rows)) if rows > 1 else 0
+    return (PRESET_CYCLES + 2 * PULSE_CYCLES + SA_READ_CYCLES
+            + popcount.apc_cycles(1) + merge)
+
+
+def cycles_scpim_csa(n_bits: int = 10, n_mac: int = 100) -> float:
+    """This work, CSA+FA pop-count amortized over an n_mac MAC (Fig. 6):
+    constant lock-step fold per MUL + one FA resolve per MAC."""
+    nbit = 1 << n_bits
+    per_mul_popcount = popcount.csa_fa_cycles_per_mul(n_mac, nbit)
+    return PRESET_CYCLES + 2 * PULSE_CYCLES + per_mul_popcount
+
+
+def cycles_sc(n_bits: int = 10) -> float:
+    """Conventional SC: SNG-generated bitstreams + APC.
+
+    Two 2^n-bit streams from the shared SNG bank, plus the decorrelation
+    shuffle the paper notes pseudo-random streams need; AND is fused into the
+    stream, APC closes.
+    """
+    nbit = 1 << n_bits
+    gen = 2 * nbit / SNG_BITS_PER_CYCLE
+    shuffle = SNG_SHUFFLE_FACTOR * nbit / SNG_BITS_PER_CYCLE
+    return gen + shuffle + popcount.apc_cycles(1)
+
+
+def cycles_pim(n_bits: int = 10) -> float:
+    """Bitwise-Boolean in-memory MUL (DRISA): quadratic shift-add scaling
+    from the published 8-bit / 143-cycle anchor."""
+    return math.ceil(DRISA_8BIT_CYCLES * (n_bits / 8) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Energy (Fig. 10)
+# ---------------------------------------------------------------------------
+
+
+def _write_energy_pj(tau_ns: float, i_factor: float = 1.0) -> float:
+    """Joule heating per cell: I²·R·τ, in pJ."""
+    i = I_C_A * i_factor
+    return (i * i) * R_HML_OHM * (tau_ns * 1e-9) * 1e12
+
+
+def energy_scpim(n_bits: int = 10, popcount_kind: str = "apc",
+                 n_mac: int = 100) -> tuple[float, dict]:
+    nbit = 1 << n_bits
+    init = nbit * _write_energy_pj(PRESET_TAU_NS, PRESET_I_FACTOR)
+    pulses = 2 * nbit * _write_energy_pj(PULSE_TAU_NS)
+    convert = 2 * (DTC_ENERGY_PJ + LUT_READ_PJ)
+    if popcount_kind == "apc":
+        pc = APC_ENERGY_PJ
+    else:
+        ops = popcount.csa_fa_cycles_per_mul(n_mac, nbit)
+        pc = ops * CSA_OP_PJ
+    bd = {"init": init, "sc_pulses": pulses, "conversion": convert, "popcount": pc}
+    return sum(bd.values()), bd
+
+
+def energy_sc(n_bits: int = 10) -> tuple[float, dict]:
+    nbit = 1 << n_bits
+    gen = 2 * nbit * SNG_GEN_PJ_PER_BIT
+    buffering = 2 * nbit * SRAM_BUFFER_PJ_PER_BIT     # 88 %-class share
+    pc = APC_ENERGY_PJ
+    bd = {"sng_generation": gen, "buffering": buffering, "popcount": pc}
+    return sum(bd.values()), bd
+
+
+def energy_pim(n_bits: int = 10) -> tuple[float, dict]:
+    ops = cycles_pim(n_bits)
+    bd = {"bitwise_ops": ops * PIM_OP_PJ}
+    return sum(bd.values()), bd
+
+
+# ---------------------------------------------------------------------------
+# Area (Fig. 11)
+# ---------------------------------------------------------------------------
+
+
+def area_scpim(n_bits: int = 10, popcount_kind: str = "apc") -> tuple[float, dict]:
+    lut_bits = (1 << n_bits) * 16               # 2^n entries × 16-bit fixed point
+    lut = lut_bits * MRAM_CELL_AREA_UM2
+    bd = {"dtc": DTC_AREA_UM2, "lut": lut}
+    if popcount_kind == "apc":
+        bd["apc"] = APC_AREA_UM2
+    else:
+        bd["csa_fa_logic"] = 0.15 * APC_AREA_UM2   # FA column + control only
+    return sum(bd.values()), bd
+
+
+def area_sc(n_bits: int = 10) -> tuple[float, dict]:
+    non_sng = APC_AREA_UM2 + AND_BUFFER_AREA_UM2
+    sng = non_sng * SNG_AREA_FRACTION / (1.0 - SNG_AREA_FRACTION)
+    bd = {"sng": sng, "apc": APC_AREA_UM2, "and_buffers": AND_BUFFER_AREA_UM2}
+    return sum(bd.values()), bd
+
+
+def area_pim(n_bits: int = 10) -> tuple[float, dict]:
+    return PIM_LOGIC_AREA_UM2, {"subarray_logic": PIM_LOGIC_AREA_UM2}
+
+
+# ---------------------------------------------------------------------------
+# Summary table (what benchmarks/fig9..11 print)
+# ---------------------------------------------------------------------------
+
+
+def full_comparison(n_bits: int = 10, n_mac: int = 100) -> dict[str, MulCost]:
+    e_apc, bd_e_apc = energy_scpim(n_bits, "apc")
+    e_csa, bd_e_csa = energy_scpim(n_bits, "csa", n_mac)
+    e_sc, bd_e_sc = energy_sc(n_bits)
+    e_pim, bd_e_pim = energy_pim(n_bits)
+    a_apc, bd_a_apc = area_scpim(n_bits, "apc")
+    a_csa, bd_a_csa = area_scpim(n_bits, "csa")
+    a_sc, bd_a_sc = area_sc(n_bits)
+    a_pim, bd_a_pim = area_pim(n_bits)
+    return {
+        "SC+PIM (APC)": MulCost(cycles_scpim_apc(n_bits), e_apc, a_apc,
+                                {"energy": bd_e_apc, "area": bd_a_apc}),
+        "SC+PIM (CSA)": MulCost(cycles_scpim_csa(n_bits, n_mac), e_csa, a_csa,
+                                {"energy": bd_e_csa, "area": bd_a_csa}),
+        "SC": MulCost(cycles_sc(n_bits), e_sc, a_sc,
+                      {"energy": bd_e_sc, "area": bd_a_sc}),
+        "PIM": MulCost(cycles_pim(n_bits), e_pim, a_pim,
+                       {"energy": bd_e_pim, "area": bd_a_pim}),
+    }
+
+
+def headline_ratios(n_bits: int = 10) -> dict[str, float]:
+    """The paper's headline comparisons at its own anchor points.
+
+    ``speedup_vs_pim`` follows the paper's framing: their 10-bit SC-MUL
+    against the PUBLISHED DRISA number ("143 cycles to calculate an 8-bit
+    multiplication") — 143 / ~8 = ~18x. The same-bit-width (10-bit) ratio is
+    also reported for honesty; it is LARGER (DRISA scales quadratically)."""
+    ours = cycles_scpim_apc(n_bits)
+    e_ours, _ = energy_scpim(n_bits, "apc")
+    e_sc, _ = energy_sc(n_bits)
+    a_ours, _ = area_scpim(n_bits, "apc")
+    a_sc, _ = area_sc(n_bits)
+    return {
+        "speedup_vs_sc": cycles_sc(n_bits) / ours,
+        "speedup_vs_pim": cycles_pim(8) / ours,          # the paper's anchor
+        "speedup_vs_pim_same_bits": cycles_pim(n_bits) / ours,
+        "energy_saving_vs_sc": 1.0 - e_ours / e_sc,
+        "area_ratio_sc_over_ours": a_sc / a_ours,
+    }

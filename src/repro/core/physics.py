@@ -1,0 +1,94 @@
+"""SOT-MRAM stochastic-switching physics (paper Eq. 3) and pulse scaling.
+
+The paper's device model: a MRAM bit under a write-current pulse of strength
+``I`` (relative to the critical current ``I_c``) and duration ``tau`` (ns)
+remains *unswitched* with probability
+
+    P_usw(tau, I) = exp(-tau * exp(-Delta * (1 - I / I_c)))
+
+with thermal stability ``Delta = 60.9`` and ``I_c = 80 uA`` (PRESCOTT
+micromagnetics, paper refs [12][14]).
+
+Operating point used throughout the paper (and here): ``I = I_c`` — the inner
+exponential collapses to 1 and ``P_usw = exp(-tau)``, so a desired survival
+probability ``P`` is programmed *exactly* by a pulse of duration
+``tau = -ln(P)``. That is why the data-conversion chain (paper Eq. 4) takes a
+logarithm first: the device supplies the inverse exponential for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# Paper constants (Section II-B).
+DELTA = 60.9                 # thermal-stability parameter of the MTJ
+I_C_UA = 80.0                # critical switching current, micro-amps
+PRESET_TAU_NS = 3.0          # long deterministic pulse for preset (P_usw < 1e-26 @ I=I_c)
+PRESET_I_FACTOR = 1.25       # preset uses a stronger reverse current (Fig. 10 discussion)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceParams:
+    """Per-device physical parameters; fluctuation models perturb these."""
+
+    delta: float = DELTA
+    i_c_ua: float = I_C_UA
+
+    def with_ic_fluctuation(self, sigma_frac: float) -> "DeviceParams":
+        # Convenience for scalar analyses; array-level fluctuations are applied
+        # in variance.py where per-bit i_c tensors are drawn.
+        return dataclasses.replace(self, i_c_ua=self.i_c_ua * (1.0 + sigma_frac))
+
+
+def p_unswitched(tau_ns, i_ua, *, delta=DELTA, i_c_ua=I_C_UA):
+    """Paper Eq. 3 — probability the bit survives (remains unswitched).
+
+    Vectorized over any broadcastable combination of ``tau_ns`` / ``i_ua`` /
+    per-bit ``i_c_ua`` (hardware-variance studies pass arrays for ``i_c_ua``).
+    """
+    tau_ns = jnp.asarray(tau_ns)
+    i_ua = jnp.asarray(i_ua)
+    rate = jnp.exp(-delta * (1.0 - i_ua / i_c_ua))
+    return jnp.exp(-tau_ns * rate)
+
+
+def tau_for_probability(p, *, i_ua=I_C_UA, delta=DELTA, i_c_ua=I_C_UA):
+    """Inverse of Eq. 3 in tau: pulse duration that yields survival prob ``p``.
+
+    At the paper's operating point (i = i_c) this is simply ``-ln(p)``.
+    ``p`` is clipped away from {0, 1}: a zero-duration pulse cannot be emitted
+    by the DTC and an infinite pulse never terminates — both ends are handled
+    by the encoding layer (conversion.py) before reaching the device.
+    """
+    p = jnp.clip(jnp.asarray(p), 1e-30, 1.0 - 1e-12)
+    rate = jnp.exp(-delta * (1.0 - i_ua / i_c_ua))
+    return -jnp.log(p) / rate
+
+
+def scale_to_half_switching(tau_ns, *, target_p=0.5):
+    """Normalization described in paper §III-D.
+
+    The pulse-duration range is rescaled so the *typical* operand lands near
+    ``P_usw ≈ 0.5`` — the bitstream is then "neither sparse nor dense", which
+    maximizes the number of informative stochastic bits (and caps the pulse at
+    roughly the deterministic switching time, avoiding slowdown). Returns the
+    scale factor applied and the scaled durations.
+    """
+    tau_ns = jnp.asarray(tau_ns)
+    tau_half = -jnp.log(jnp.asarray(target_p))  # = ln 2 at i = i_c
+    mean_tau = jnp.mean(tau_ns)
+    scale = jnp.where(mean_tau > 0, tau_half / jnp.maximum(mean_tau, 1e-30), 1.0)
+    return scale, tau_ns * scale
+
+
+def switching_energy_aj(tau_ns, i_ua, *, r_hml_ohm=250.0):
+    """Joule-heating write energy per bit in attojoules: E = I^2 * R * tau.
+
+    Only used by the cost model (Fig. 10 reproduction); the constant HML
+    resistance is folded into the calibration there.
+    """
+    i_a = jnp.asarray(i_ua) * 1e-6
+    tau_s = jnp.asarray(tau_ns) * 1e-9
+    return (i_a * i_a) * r_hml_ohm * tau_s * 1e18

@@ -1,0 +1,94 @@
+"""Hardware-variance studies (§IV-B) and the logarithm-multiplier baseline.
+
+Two fluctuation sources from the paper:
+
+* **σ(I_c)** — per-cell critical-current spread (manufacturing + thermal,
+  ref [18]). Injected as iid Gaussian multipliers on each cell's I_c before
+  every pulse; the engine's Eq. 3 then sees per-cell switching rates.
+  Paper result (Fig. 8a): MUL accuracy is *insensitive* to σ(I_c) up to 10 %
+  — at the operating point I = I_c the inner exponential exp(-Δ(1-I/I_c))
+  fluctuates, but fluctuations average out across the nbit cells and, being
+  zero-centered in log-rate, largely cancel in the survival fraction.
+
+* **σ(Circuits)** — timing/gain error of the conversion circuits. For our
+  design this perturbs the DTC pulse durations (multiplicative Gaussian on
+  τ). For the **logarithm multiplier** baseline (ref [15]) the same σ
+  perturbs the log and antilog stages; because the antilog *exponentiates*
+  its input error, the output error grows ∝ |ln(XY)|·σ — this is why Fig. 8b
+  shows the log-multiplier degrading sharply while SC+PIM stays flat (the
+  SC average is only linearly sensitive to τ noise, and τ noise is further
+  suppressed by the P≈0.5 operating range).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conversion, engine, physics
+
+
+def sc_mul_with_ic_variance(key, x_int, y_int, cfg: engine.EngineConfig,
+                            sigma_ic: float):
+    """One SC MUL with per-cell I_c ~ N(I_c, (sigma_ic·I_c)²). Returns p_est."""
+    kx, kv = jax.random.split(key)
+    batch_shape = jnp.broadcast_shapes(jnp.shape(x_int), jnp.shape(y_int))
+    ic = physics.I_C_UA * (
+        1.0 + sigma_ic * jax.random.normal(kv, batch_shape + (cfg.nbit,)))
+    ic = jnp.maximum(ic, 1e-3)
+    tau_x = conversion.operand_to_tau(jnp.asarray(x_int, jnp.int32), cfg.conv)
+    tau_y = conversion.operand_to_tau(jnp.asarray(y_int, jnp.int32), cfg.conv)
+    state = engine.sc_multiply_states(kx, tau_x, tau_y, cfg, i_c_ua=ic)
+    return engine.readout(state)
+
+
+def sc_mul_with_circuit_variance(key, x_int, y_int, cfg: engine.EngineConfig,
+                                 sigma_circ: float):
+    """One SC MUL with DTC timing noise: τ -> τ·(1+N(0,σ²)) per pulse."""
+    kx, kt1, kt2 = jax.random.split(key, 3)
+    tau_x = conversion.operand_to_tau(jnp.asarray(x_int, jnp.int32), cfg.conv)
+    tau_y = conversion.operand_to_tau(jnp.asarray(y_int, jnp.int32), cfg.conv)
+    tau_x = tau_x * (1.0 + sigma_circ * jax.random.normal(kt1, jnp.shape(tau_x)))
+    tau_y = tau_y * (1.0 + sigma_circ * jax.random.normal(kt2, jnp.shape(tau_y)))
+    tau_x = jnp.maximum(tau_x, 0.0)
+    tau_y = jnp.maximum(tau_y, 0.0)
+    state = engine.sc_multiply_states(kx, tau_x, tau_y, cfg)
+    return engine.readout(state)
+
+
+def log_multiplier(key, x_int, y_int, conv_cfg: conversion.ConversionConfig,
+                   sigma_circ: float):
+    """Logarithm-multiplication baseline (ref [15]) with circuit variance.
+
+    X·Y = antilog(ln X + ln Y). The DTC+MRAM stage is replaced by an
+    ANALOG antilogarithm amplifier. The crucial asymmetry vs SC+PIM
+    (paper Fig. 8b): an antilog amplifier's component variance (V_T
+    mismatch, bias drift) is EXPONENT-REFERRED over the circuit's full
+    dynamic range — the amplifier maps a full-scale input voltage onto
+    2^n octaves, so a fractional gain/offset error ε shifts the exponent
+    by ε·(n·ln2), multiplying the output by exp(ε·n·ln2) regardless of
+    operand value. The SC path has no such amplification: DTC timing error
+    perturbs τ, which the §III-D normalization keeps at O(ln 2), and the
+    MRAM cells average the remaining noise. Returns the estimated product
+    probability for comparability with the SC path.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    px = conversion.encode_probability(jnp.asarray(x_int, jnp.int32), conv_cfg)
+    py = conversion.encode_probability(jnp.asarray(y_int, jnp.int32), conv_cfg)
+    px = jnp.clip(px, 1e-9, 1.0)
+    py = jnp.clip(py, 1e-9, 1.0)
+    full_scale = conv_cfg.n_bits * jnp.log(2.0)   # exponent dynamic range
+    # log stage: each ln output carries amplifier noise referred to full scale
+    lx = jnp.log(px) + sigma_circ * full_scale \
+        * jax.random.normal(k1, px.shape)
+    ly = jnp.log(py) + sigma_circ * full_scale \
+        * jax.random.normal(k2, py.shape)
+    # antilog amplifier: exponent-referred gain/offset error over full scale
+    s = (lx + ly) + sigma_circ * full_scale * jax.random.normal(k3, px.shape)
+    return jnp.exp(s)
+
+
+def mul_uncertainty(p_estimates, p_true) -> jnp.ndarray:
+    """σ of the error distribution (the paper's 'MUL uncertainty' metric)."""
+    err = p_estimates - p_true
+    return jnp.std(err)

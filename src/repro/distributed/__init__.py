@@ -1,0 +1,2 @@
+from repro.distributed.compression import (  # noqa: F401
+    compressed_grads, init_error_feedback)

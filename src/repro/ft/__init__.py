@@ -1,0 +1,2 @@
+from repro.ft.supervisor import (  # noqa: F401
+    FaultInjector, StragglerMonitor, Supervisor, WorkerFailure)

@@ -1,0 +1,82 @@
+"""Public jit'd wrappers for the SC Pallas kernels.
+
+Handles everything the kernels do not: probability encoding, entropy-stream
+generation, padding to block multiples, and un-padding of the results. These
+are the entry points the model stack (models/layers.py) and benchmarks call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scmac as scmac_core
+from repro.kernels import sc_mac as sc_mac_kernel
+from repro.kernels import sc_mul as sc_mul_kernel
+
+
+def _pad_to(x, multiple, axis):
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def to_fx16(p):
+    """Probability in [0, 1] -> 16-bit fixed-point bias word (clamped)."""
+    return jnp.minimum(jnp.round(p * 65536.0), 65535.0).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("nbit", "block_m", "interpret"))
+def sc_mul_bitexact(key, p_x, p_y, *, nbit: int = 1024, block_m: int = 8,
+                    interpret: bool = True):
+    """Batched bit-exact SC MUL of probability vectors via the Pallas engine.
+
+    p_x, p_y: (M,) float probabilities. Returns (M,) float estimates of
+    p_x·p_y (pop-count / nbit). nbit must be a multiple of 32.
+    """
+    assert nbit % sc_mul_kernel.LANE_BITS == 0
+    w = nbit // sc_mul_kernel.LANE_BITS
+    m = p_x.shape[0]
+    px = _pad_to(to_fx16(p_x), block_m, 0)
+    py = _pad_to(to_fx16(p_y), block_m, 0)
+    mp = px.shape[0]
+    kx, ky = jax.random.split(key)
+    shape = (mp, sc_mul_kernel.NSLICES, w)
+    rx = jax.random.bits(kx, shape, jnp.uint32)
+    ry = jax.random.bits(ky, shape, jnp.uint32)
+    counts = sc_mul_kernel.sc_mul_popcount(px, py, rx, ry,
+                                           block_m=block_m,
+                                           interpret=interpret)
+    return counts[:m].astype(jnp.float32) / nbit
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nbit", "block_m", "block_n", "block_k", "interpret"))
+def sc_matmul_fused(key, x, w, *, nbit: int = 1024, block_m: int = 128,
+                    block_n: int = 128, block_k: int = 512,
+                    interpret: bool = True):
+    """Moment-matched SC matmul of float tensors via the fused Pallas kernel.
+
+    x: (M, K), w: (K, N) floats. Encodes to signed probabilities (per-tensor
+    max-abs scale, paper's 10-bit operand grid), runs the fused kernel, and
+    rescales. Drop-in for ``x @ w`` with SC sampling noise.
+    """
+    cfg = scmac_core.SCMacConfig(mode="moment", nbit=nbit)
+    sx, px, scx = scmac_core.encode(x, cfg)
+    sw, pw, scw = scmac_core.encode(w, cfg)
+    xs = _pad_to(sx * px, max(1, min(block_m, x.shape[0])), 0)
+    xs = _pad_to(xs, min(block_k, x.shape[1]), 1)
+    ws = _pad_to(sw * pw, min(block_k, x.shape[1]), 0)
+    ws = _pad_to(ws, max(1, min(block_n, w.shape[1])), 1)
+    noise = jax.random.normal(key, (xs.shape[0], ws.shape[1]), jnp.float32)
+    out = sc_mac_kernel.sc_mac_fused(
+        xs, ws, noise, nbit=nbit, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret)
+    return out[: x.shape[0], : w.shape[1]] * (scx * scw)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``sc_mul_popcount_ref`` reproduces kernels/sc_mul.py **bit-for-bit** (same
+Horner ladder over the same random words), so tests can assert exact
+equality, not just statistics. ``sc_mac_ref`` is the analytic moment-matched
+matmul the fused kernel must match to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.sc_mul import NSLICES
+
+
+def bernoulli_words_ref(p_fx16, u_slices):
+    """(m,) bias, (m, NSLICES, w) uniforms -> (m, w) packed Bernoulli words."""
+    t = jnp.zeros((u_slices.shape[0], u_slices.shape[2]), jnp.uint32)
+    for j in range(NSLICES):
+        bit = (p_fx16[:, None] >> j) & jnp.uint32(1)
+        mask = jnp.uint32(0) - bit
+        u = u_slices[:, j, :]
+        t = (mask & (u | t)) | (~mask & (u & t))
+    return t
+
+
+def popcount32_ref(v):
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def sc_mul_popcount_ref(p_x_fx16, p_y_fx16, rand_x, rand_y):
+    """Oracle for sc_mul_popcount: (M,) int32 pop-counts."""
+    bx = bernoulli_words_ref(p_x_fx16, rand_x)
+    by = bernoulli_words_ref(p_y_fx16, rand_y)
+    return jnp.sum(popcount32_ref(bx & by), axis=-1).astype(jnp.int32)
+
+
+def sc_mac_ref(x_signed_p, w_signed_p, noise, *, nbit: int):
+    """Oracle for sc_mac_fused (scale-free, caller applies scale)."""
+    mean = jnp.dot(x_signed_p, w_signed_p, preferred_element_type=jnp.float32)
+    sum_p = jnp.dot(jnp.abs(x_signed_p), jnp.abs(w_signed_p),
+                    preferred_element_type=jnp.float32)
+    sum_p2 = jnp.dot(x_signed_p ** 2, w_signed_p ** 2,
+                     preferred_element_type=jnp.float32)
+    var = jnp.maximum(sum_p - sum_p2, 0.0) / nbit
+    return mean + noise * jnp.sqrt(var)

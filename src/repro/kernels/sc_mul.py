@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: packed bit-exact SC multiplication engine.
+
+This kernel plays the role of one bank of cross-point SOT-MRAM sub-arrays
+(paper Fig. 4/5): for a batch of M MULs it materializes the stochastic bit
+arrays, applies the two-pulse AND semantics, and pop-counts — all inside one
+VMEM-resident pass, so the "data explosion" of SC never touches HBM
+(the paper's in-situ-storage property mapped to in-VMEM residency).
+
+Bit representation: 32 stochastic cells per ``uint32`` lane word. Per-bit
+Bernoulli(p) draws are synthesized from iid uniform words with the
+**bit-sliced Horner ladder** (the classic weighted-bitstream construction):
+
+    t = 0
+    for slice j = LSB..MSB of p (16-bit fixed point):
+        t = u_j | t   if bit_j(p) else   u_j & t
+
+which yields P(bit of t = 1) = p exactly to 2^-16, for all 32 lanes of every
+word in parallel — this is the TPU-native analogue of the row-parallel
+stochastic write (every cell sees an independent coin with the same bias).
+
+Pop-count is SWAR (shift-mask-add) on the packed words, fused with the
+generation so the bits live and die inside VMEM.
+
+Entropy source: random words are *inputs* (counter-based threefry generated
+by the caller) because ``pltpu.prng_random_bits`` has no CPU interpret path
+in this container. On real TPU hardware the ops.py wrapper can flip
+``inkernel_prng=True`` to generate the words on-chip and shrink the input
+stream by 32×; the kernel math is unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NSLICES = 16        # fixed-point precision of the Bernoulli bias (2^-16)
+LANE_BITS = 32      # stochastic cells per packed word
+
+
+def bernoulli_words(p_fx16, u_slices):
+    """Packed Bernoulli(p) words from NSLICES uniform words (Horner ladder).
+
+    p_fx16:   (bm, 1)  uint32 — bias in 16-bit fixed point (p·2^16, clamped)
+    u_slices: (bm, NSLICES, bw) uint32 — iid uniform random words
+    returns:  (bm, bw) uint32 — each bit iid Bernoulli(p) per row
+    """
+    t = jnp.zeros(u_slices.shape[:1] + u_slices.shape[2:], jnp.uint32)
+    for j in range(NSLICES):            # LSB -> MSB of the fixed-point bias
+        bit = (p_fx16 >> j) & jnp.uint32(1)          # (bm, 1)
+        mask = (jnp.uint32(0) - bit)                 # 0 or 0xFFFFFFFF
+        u = u_slices[:, j, :]
+        t = (mask & (u | t)) | (~mask & (u & t))
+    return t
+
+
+def popcount32(v):
+    """SWAR pop-count of every uint32 word."""
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def _sc_mul_kernel(px_ref, py_ref, ux_ref, uy_ref, out_ref):
+    """One tile: bm MULs × bw packed words.
+
+    px/py: (bm, 1) uint32 biases; ux/uy: (bm, NSLICES, bw) uniform words;
+    out: (bm, 1) int32 pop-counts of the surviving cells.
+    """
+    px = px_ref[...]
+    py = py_ref[...]
+    bits_x = bernoulli_words(px, ux_ref[...])   # pulse τ_X survival draw
+    bits_y = bernoulli_words(py, uy_ref[...])   # pulse τ_Y survival draw
+    survived = bits_x & bits_y                  # two-pulse AND (Fig. 5)
+    counts = popcount32(survived)               # (bm, bw) per-word counts
+    out_ref[...] = jnp.sum(counts, axis=-1, keepdims=True).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def sc_mul_popcount(p_x_fx16, p_y_fx16, rand_x, rand_y, *,
+                    block_m: int = 8, interpret: bool = True):
+    """Batched bit-exact SC MUL: returns pop-counts, shape (M,) int32.
+
+    p_*_fx16: (M,) uint32 biases (p·2^16); rand_*: (M, NSLICES, W) uint32.
+    nbit = 32·W stochastic cells per MUL. M must be a multiple of block_m
+    (ops.py pads).
+    """
+    m, nslices, w = rand_x.shape
+    assert nslices == NSLICES and m % block_m == 0
+    grid = (m // block_m,)
+    out = pl.pallas_call(
+        _sc_mul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, NSLICES, w), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_m, NSLICES, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        interpret=interpret,
+    )(p_x_fx16.reshape(m, 1), p_y_fx16.reshape(m, 1), rand_x, rand_y)
+    return out[:, 0]

@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes, and record memory / cost / collective
+analyses for EXPERIMENTS.md §Dry-run and §Roofline.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first backend init, and the dry-run needs 512 virtual
+host devices for the (2, 16, 16) multi-pod mesh. Nothing else in the repo
+sets this flag — smoke tests and benchmarks see the real single CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --out results.json
+"""
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, supported_shapes  # noqa: E402
+from repro.launch import hlo_analysis, specs as S  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm, params as params_lib  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+from repro.optim.adamw import adamw_init  # noqa: E402
+from repro.train import TrainConfig, make_train_step  # noqa: E402
+from repro.train.step import make_constrain, make_param_constrain  # noqa: E402
+
+DRYRUN_ARCHS = [a for a in ARCH_IDS if a != "paper-sc"]
+
+
+def _abstract_state(cfg, tcfg, mesh):
+    """Abstract train state + matching shardings."""
+    p_specs = lm.lm_param_specs(cfg)
+    params = params_lib.abstract_params(p_specs, cfg.param_dtype)
+    opt = jax.eval_shape(lambda p: adamw_init(p, tcfg.optimizer), params)
+    p_sh = S.param_shardings(cfg, mesh)
+    state_sh = {"params": p_sh, "opt": S.opt_shardings(cfg, mesh, p_sh)}
+    return {"params": params, "opt": opt}, state_sh
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True,
+               return_cost: bool = False):
+    """Lower (and optionally compile) one cell. Returns a result dict
+    (and the HloCost profile when ``return_cost``)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    # Optimizer state dtype: bf16 for the 400B config (f32 Adam does not fit
+    # 16 GB/chip at 256 chips — see EXPERIMENTS §Dry-run), f32 elsewhere.
+    state_dtype = "bf16" if "400b" in arch else "f32"
+    tcfg = TrainConfig(optimizer=AdamWConfig(state_dtype=state_dtype))
+
+    with mesh:
+        if shape.kind == "train":
+            state, state_sh = _abstract_state(cfg, tcfg, mesh)
+            batch = S.input_specs(cfg, shape)["batch"]
+            batch_sh = S.batch_shardings(cfg, mesh, shape.global_batch)
+            step = make_train_step(cfg, tcfg, mesh)
+            metrics_sh = {"loss": S.replicated(mesh),
+                          "grad_norm": S.replicated(mesh),
+                          "lr": S.replicated(mesh)}
+            jitted = jax.jit(step,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, metrics_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+        elif shape.kind == "prefill":
+            params = params_lib.abstract_params(lm.lm_param_specs(cfg),
+                                                cfg.param_dtype)
+            p_sh = S.param_shardings(cfg, mesh)
+            inp = S.input_specs(cfg, shape)["inputs"]
+            inp_sh = S.batch_shardings(cfg, mesh, shape.global_batch)["inputs"]
+            cache_sh = S.cache_shardings(cfg, mesh, shape.global_batch,
+                                         shape.seq_len)
+            out_sh = (S.logits_sharding(cfg, mesh, shape.global_batch, False),
+                      cache_sh, S.replicated(mesh))
+            fn = partial(lm.prefill, cfg=cfg, max_len=shape.seq_len,
+                         constrain=make_constrain(mesh),
+                         constrain_params=make_param_constrain(mesh, cfg))
+            jitted = jax.jit(lambda p, x: fn(p, x),
+                             in_shardings=(p_sh, inp_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params, inp)
+        else:  # decode
+            params = params_lib.abstract_params(lm.lm_param_specs(cfg),
+                                                cfg.param_dtype)
+            p_sh = S.param_shardings(cfg, mesh)
+            ins = S.input_specs(cfg, shape)
+            cache_sh = S.cache_shardings(cfg, mesh, shape.global_batch,
+                                         shape.seq_len)
+            dp = S._dp_axes(mesh, shape.global_batch)
+            vec_sh = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(dp))
+            out_sh = (S.logits_sharding(cfg, mesh, shape.global_batch, False),
+                      cache_sh)
+            fn = partial(lm.decode_step, cfg=cfg,
+                         constrain=make_constrain(mesh),
+                         constrain_params=make_param_constrain(mesh, cfg))
+            jitted = jax.jit(lambda p, c, t, l: fn(p, c, t, l),
+                             in_shardings=(p_sh, cache_sh, vec_sh, vec_sh),
+                             out_shardings=out_sh,
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, ins["cache"], ins["tokens"],
+                                   ins["lengths"])
+
+        result = {"arch": arch, "shape": shape_name, "chips": chips,
+                  "mesh": "x".join(map(str, mesh.devices.shape)),
+                  "lower_s": round(time.time() - t0, 1)}
+        if not compile_:
+            return (result, None) if return_cost else result
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        args_b = result["memory"].get("argument_size_in_bytes", 0)
+        temp_b = result["memory"].get("temp_size_in_bytes", 0)
+        result["memory"]["total_per_device_gb"] = round(
+            (args_b + temp_b) / 2**30, 3)
+    except Exception as e:                       # CPU backend may not support
+        result["memory_error"] = f"{type(e).__name__}: {e}"
+
+    # XLA's own cost analysis (recorded as a cross-check; it counts while
+    # bodies once, so the roofline uses our trip-count-aware HLO walk).
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    result["xla_cost"] = {k: float(cost[k])
+                          for k in ("flops", "bytes accessed") if k in cost}
+
+    hc = hlo_analysis.analyze_hlo(compiled.as_text())
+    result["hlo_cost"] = {
+        "flops_per_device": hc.flops, "bytes_per_device": hc.bytes,
+        "collectives_by_kind": hc.coll_by_kind,
+        "unresolved_loops": hc.unresolved_loops}
+
+    mf = hlo_analysis.model_flops_estimate(cfg, shape)
+    rf = hlo_analysis.roofline_from_cost(hc, chips, model_flops=mf)
+    result["roofline"] = rf.row()
+    return (result, hc) if return_cost else result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=DRYRUN_ARCHS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else DRYRUN_ARCHS
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = supported_shapes(cfg)
+        skipped = [s for s in SHAPES if s not in shapes]
+        for sk in skipped:
+            if args.shape in (None, sk):
+                results.append({"arch": arch, "shape": sk, "skipped":
+                                "full-attention arch: long_500k needs "
+                                "sub-quadratic attention (DESIGN.md)"})
+        for shape_name in shapes:
+            if args.shape and shape_name != args.shape:
+                continue
+            for multi_pod in meshes:
+                mesh = make_production_mesh(multi_pod=multi_pod)
+                label = f"{arch} × {shape_name} × {'x'.join(map(str, mesh.devices.shape))}"
+                try:
+                    r = lower_cell(arch, shape_name, mesh,
+                                   compile_=not args.no_compile)
+                    results.append(r)
+                    rf = r.get("roofline", {})
+                    print(f"[ok] {label}: compile={r.get('compile_s', '-')}s "
+                          f"mem/dev={r.get('memory', {}).get('total_per_device_gb', '?')}GB "
+                          f"bound={rf.get('bound', '?')}", flush=True)
+                except Exception as e:
+                    failures.append({"cell": label, "error": str(e)})
+                    print(f"[FAIL] {label}: {type(e).__name__}: {e}",
+                          flush=True)
+                    traceback.print_exc()
+                with open(args.out, "w") as f:
+                    json.dump({"results": results, "failures": failures},
+                              f, indent=1)
+    print(f"\n{len(results)} cells recorded, {len(failures)} failures "
+          f"-> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

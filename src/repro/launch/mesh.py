@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its first
+jax import, and everything else must see the real single CPU device.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: (data=16, model=16) = 256 chips; multi-pod adds a
+    leading pure-DP pod axis (2 pods = 512 chips over DCI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)   # works for Mesh and AbstractMesh
+
+
+def data_parallel_size(mesh) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    return math.prod(sizes.get(a, 1) for a in ("pod", "data"))

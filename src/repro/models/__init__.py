@@ -1,0 +1,2 @@
+from repro.models import (  # noqa: F401
+    attention, frontend, layers, lm, moe, params, ssm)

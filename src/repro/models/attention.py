@@ -1,0 +1,231 @@
+"""GQA attention: full and blockwise (flash-style online-softmax) variants,
+plus single-token decode over a KV cache.
+
+Blockwise attention scans over KV chunks with a running (max, denominator,
+accumulator) triple, so peak memory is O(S·chunk) instead of O(S²) — this is
+what lets prefill_32k lower within HBM and is remat-friendly inside the
+layer scan. GQA is computed grouped: q heads are reshaped to
+(kv_heads, group) so no KV head replication is materialized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    sp = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads"), "scaled"),
+        "wk": ParamSpec((d, kv * hd), ("embed", "kv_embed"), "scaled"),
+        "wv": ParamSpec((d, kv * hd), ("embed", "kv_embed"), "scaled"),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        sp.update({
+            "bq": ParamSpec((h * hd,), ("heads",), "zeros"),
+            "bk": ParamSpec((kv * hd,), ("kv_embed",), "zeros"),
+            "bv": ParamSpec((kv * hd,), ("kv_embed",), "zeros"),
+        })
+    if cfg.qk_norm:
+        sp.update({
+            "q_norm": ParamSpec((hd,), (None,), "ones"),
+            "k_norm": ParamSpec((hd,), (None,), "ones"),
+        })
+    return sp
+
+
+def _project_qkv(x, p, cfg, positions, key=None):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    keys = [None] * 3 if key is None else list(jax.random.split(key, 3))
+    q = layers.dense(x, p["wq"], cfg, keys[0], p.get("bq")).reshape(b, s, h, hd)
+    k = layers.dense(x, p["wk"], cfg, keys[1], p.get("bk")).reshape(b, s, kv, hd)
+    v = layers.dense(x, p["wv"], cfg, keys[2], p.get("bv")).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"])
+        k = layers.rms_norm(k, p["k_norm"])
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _grouped(q, kv_heads):
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, hd)
+
+
+def full_attention(q, k, v, *, causal: bool = True):
+    """Reference O(S²) attention. q: (b,s,h,d), k/v: (b,t,kv,d)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    qg = _grouped(q, kv)                                  # (b,s,kv,g,d)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        t = k.shape[1]
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                        q_chunk: int | None = None):
+    """Flash-style attention: q-chunk outer scan x kv-chunk inner scan with
+    online softmax. Exact -- matches full_attention to float tolerance.
+
+    Peak intermediate is one (b, kv, g, cq, ckv) logits tile per step. The
+    kv step is jax.checkpoint'd so the backward pass (even nested inside the
+    per-layer remat scan) recomputes tiles instead of saving every chunk's
+    probabilities -- this is what keeps the 32k-prefill cells inside HBM.
+
+    ``q_chunk`` overrides the query-side chunk. Context-parallel attention
+    passes q_chunk = s (ONE q block): the q sequence is already sharded over
+    the TP axis, and an outer q scan would split the sharded axis across
+    sequential scan steps — serializing the devices (EXPERIMENTS §Perf
+    cell-2 iteration 2). KV still streams in ``chunk``-sized blocks.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    t_unpadded = k.shape[1]
+    t = t_unpadded
+    ckv = min(chunk, t)
+    if t % ckv != 0:         # pad KV to a chunk multiple with masked slots
+        pad = ckv - t % ckv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    cq = min(q_chunk or chunk, s)
+    qpad = (-s) % cq
+    g = h // kv
+    qg = _grouped(q, kv).astype(jnp.float32)              # (b,s,kv,g,d)
+    if qpad:
+        qg = jnp.pad(qg, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+    nq = (s + qpad) // cq
+    nkv = t // ckv
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    kc = k.reshape(b, nkv, ckv, kv, hd).astype(jnp.float32)
+    vc = v.reshape(b, nkv, ckv, kv, hd).astype(jnp.float32)
+    qc = qg.reshape(b, nq, cq, kv, g, hd)
+    # Queries are the LAST s positions of the (unpadded) kv timeline
+    # (prefill: s == original t; one-token decode uses decode_attention).
+    q_off = t_unpadded - s
+
+    @jax.checkpoint
+    def kv_step(carry, inputs):
+        m, denom, acc, qi, qbase = carry
+        kc_i, vc_i, base = inputs
+        logits = jnp.einsum("bkgsd,btkd->bkgst", qi, kc_i) * scale
+        kv_idx = base + jnp.arange(ckv)                   # (ckv,)
+        q_idx = qbase + jnp.arange(cq) + q_off            # (cq,)
+        mask = kv_idx[None, :] <= q_idx[:, None] if causal \
+            else jnp.ones((cq, ckv), bool)
+        valid = (kv_idx < t_unpadded)[None, :]
+        logits = jnp.where((mask & valid)[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        denom = denom * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgst,btkd->bkgsd", p, vc_i)
+        return (m_new, denom, acc, qi, qbase), None
+
+    bases = jnp.arange(nkv) * ckv
+    kcm = jnp.moveaxis(kc, 1, 0)
+    vcm = jnp.moveaxis(vc, 1, 0)
+
+    def q_step(_, inputs):
+        q_i, qbase = inputs                                # (b,cq,kv,g,d)
+        qi = jnp.einsum("bskgd->bkgsd", q_i)
+        m0 = jnp.full((b, kv, g, cq), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((b, kv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, cq, hd), jnp.float32)
+        (m, denom, acc, _, _), _ = jax.lax.scan(
+            kv_step, (m0, d0, a0, qi, qbase), (kcm, vcm, bases))
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]   # (b,kv,g,cq,d)
+        return None, out
+
+    qbases = jnp.arange(nq) * cq
+    _, outs = jax.lax.scan(q_step, None, (jnp.moveaxis(qc, 1, 0), qbases))
+    # outs: (nq, b, kv, g, cq, d) -> (b, s, h, d)
+    out = jnp.moveaxis(outs, 0, 3)                         # (b,kv,g,nq,cq,d)
+    out = out.reshape(b, kv, g, nq * cq, hd)
+    out = jnp.moveaxis(out, 3, 1)[:, :s].reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """One-token decode: q (b,1,h,d) against cache (b,L,kv,d); mask > length."""
+    b, _, h, hd = q.shape
+    kv = k_cache.shape[2]
+    qg = _grouped(q, kv).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    idx = jnp.arange(k_cache.shape[1])
+    mask = idx[None, :] < length[:, None]                 # (b, L)
+    logits = jnp.where(mask[:, None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def attention_block(x, p, cfg, positions, key=None, *, cache=None,
+                    cache_length=None, constrain=None):
+    """Self-attention sub-block. Returns (out, new_cache).
+
+    Training/prefill: cache is None -> causal attention over the sequence
+    (returns the full K/V so prefill can build the cache).
+    Decode: cache = (k, v) ring buffers; x is (b, 1, d).
+    """
+    cst = constrain or (lambda v_, *a: v_)
+    q, k, v = _project_qkv(x, p, cfg, positions, key)
+    # Layout choice per arch x mesh: TP over heads when the head count
+    # divides the model axis; otherwise CONTEXT PARALLELISM — the query
+    # sequence shards over `model` (k/v replicate via one cheap gather per
+    # layer) so attention FLOPs and the flash tiles stay distributed instead
+    # of running head-replicated on every device (16x waste on 40-head
+    # configs over a 16-way TP axis — EXPERIMENTS §Perf iteration 3).
+    model_size = getattr(cst, "axis_sizes", {}).get("model", 1)
+    heads_tp = model_size <= 1 or cfg.n_heads % model_size == 0
+    if heads_tp or cache is not None:
+        q = cst(q, "batch", "seq", "heads", None)
+        k = cst(k, "batch", "seq", "kv_heads", None)
+        v = cst(v, "batch", "seq", "kv_heads", None)
+    else:
+        q = cst(q, "batch", "resid_seq", None, None)
+        k = cst(k, "batch", "seq", None, None)
+        v = cst(v, "batch", "seq", None, None)
+    if cache is not None:
+        kc, vc = cache
+        pos = positions[:, 0]                             # (b,) write index
+        kc = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+            c, upd, (i, 0, 0)))(kc, k, pos)
+        vc = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
+            c, upd, (i, 0, 0)))(vc, v, pos)
+        out = decode_attention(q, kc, vc, cache_length)
+        new_cache = (kc, vc)
+    else:
+        if cfg.attn_impl == "full":
+            out = full_attention(q, k, v, causal=True)
+        else:
+            out = blockwise_attention(
+                q, k, v, causal=True, chunk=cfg.attn_chunk,
+                # CP: q already sharded over `model` -> single q block
+                q_chunk=None if heads_tp else q.shape[1])
+        new_cache = (k, v)
+    if heads_tp or cache is not None:
+        out = cst(out, "batch", "seq", "heads", None)
+    else:
+        out = cst(out, "batch", "resid_seq", None, None)
+    b, s, _, _ = out.shape
+    okey = None if key is None else jax.random.fold_in(key, 7)
+    return layers.dense(out.reshape(b, s, -1), p["wo"], cfg, okey), new_cache

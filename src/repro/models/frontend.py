@@ -1,0 +1,33 @@
+"""Stub modality frontends (per the assignment: [audio]/[vlm] entries specify
+the transformer BACKBONE only; the frontend supplies precomputed frame/patch
+embeddings).
+
+* musicgen-large: EnCodec tokenizer + codebook interleaving -> we supply
+  per-frame embeddings of shape (batch, frames, d_model) directly.
+* chameleon-34b: VQ-GAN image tokens live in the text vocabulary (early
+  fusion), so inputs stay token ids; the stub marks a modality segment map.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frame_embeddings(key, batch: int, frames: int, d_model: int,
+                           dtype=jnp.bfloat16):
+    """Stand-in for the EnCodec front end: precomputed frame embeddings."""
+    return (jax.random.normal(key, (batch, frames, d_model), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def vq_token_ids(key, batch: int, seq: int, vocab: int,
+                 image_span: tuple[int, int] = (16, 272)):
+    """Early-fusion token stream: text ids with an image-token span
+    (chameleon's VQ codes are ordinary ids in the shared vocabulary)."""
+    toks = jax.random.randint(key, (batch, seq), 0, vocab, jnp.int32)
+    modality = jnp.zeros((batch, seq), jnp.int32)
+    lo, hi = image_span
+    hi = min(hi, seq)
+    modality = modality.at[:, lo:hi].set(1)
+    return toks, modality

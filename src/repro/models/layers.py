@@ -1,0 +1,104 @@
+"""Primitive layers: RMSNorm, Linear (SC-routable), SwiGLU MLP, RoPE, embed.
+
+Every matmul in the stack goes through :func:`dense`, which routes to the
+paper's SC engine when ``cfg.sc_mode != "exact"`` — the SC multiplication
+substrate is a first-class framework feature, selectable per model config.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scmac
+from repro.models.params import ParamSpec
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight
+
+
+def dense(x, w, cfg, key=None, bias=None):
+    """x @ w with the configured multiplication substrate.
+
+    x: (..., K); w: (K, N) (or pre-reshaped 2-D view of a fused projection).
+    SC modes need a PRNG key; exact mode ignores it.
+    """
+    if cfg.sc_mode == "exact" or key is None:
+        y = jnp.dot(x, w.astype(x.dtype))
+    else:
+        sc_cfg = scmac.SCMacConfig(mode=cfg.sc_mode, nbit=cfg.sc_nbit)
+        lead = x.shape[:-1]
+        y = scmac.sc_matmul(key, x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+                            w.astype(jnp.float32), sc_cfg)
+        y = y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+# ----------------------------- MLP (SwiGLU) --------------------------------
+
+
+def mlp_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    wi_cols = 2 * f if cfg.mlp_variant == "swiglu" else f
+    return {
+        "wi": ParamSpec((d, wi_cols), ("embed", "mlp"), "scaled"),
+        "wo": ParamSpec((f, d), ("mlp", "embed"), "scaled"),
+    }
+
+
+def mlp(x, p, cfg, key=None, constrain=None):
+    cst = constrain or (lambda v, *a: v)
+    h = dense(x, p["wi"], cfg, key)
+    # TP over the hidden dim, full sequence inside the block (Megatron
+    # pattern): without this pin Shardy reshards the multi-GB hidden between
+    # seq-sharded and mlp-sharded layouts per invocation (observed 7.5 GB
+    # collective-permutes on zamba2's shared block — EXPERIMENTS §Perf).
+    h = cst(h, "batch", "seq", "mlp")
+    if cfg.mlp_variant == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        act = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    act = cst(act, "batch", "seq", "mlp")
+    k2 = None if key is None else jax.random.fold_in(key, 1)
+    return dense(act, p["wo"], cfg, k2)
+
+
+# ----------------------------- RoPE -----------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (b, s, h, d); positions: (b, s) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (b, s, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------- Embedding ------------------------------------
+
+
+def embed_specs(cfg):
+    return {"table": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"))}
+
+
+def embed(tokens, p):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(x, p, cfg, key=None):
+    return dense(x, p["table"].T, cfg, key)

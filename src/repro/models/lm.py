@@ -1,0 +1,428 @@
+"""LM assembly: block definitions, scan-over-layers, prefill and decode.
+
+One code path serves all ten assigned architectures:
+
+  dense / audio / vlm : N × (RMSNorm → GQA attn → RMSNorm → SwiGLU MLP)
+  moe                 : N × (RMSNorm → GQA attn → RMSNorm → MoE FFN)
+  ssm                 : N × (RMSNorm → Mamba2/SSD block)
+  hybrid (zamba2)     : groups of ``attn_every`` Mamba2 layers followed by
+                        ONE weight-shared (attn + MLP) block; the scan runs
+                        over groups so each shared invocation has a static
+                        slot for its own KV cache (zamba2: 81 "layers" =
+                        54 ssm + 27 shared invocations, attn_every=2).
+
+Layers are stacked and scanned (``jax.lax.scan`` + per-layer remat), so
+compile time and HLO size are O(1) in depth — a 48-layer 400B config lowers
+as fast as a 2-layer smoke config. The per-layer PRNG for the SC engine is
+folded from the layer index inside the scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.params import ParamSpec, tree_map_specs
+
+
+# --------------------------------------------------------------------------
+# Param specs
+# --------------------------------------------------------------------------
+
+
+def _norm_spec(cfg):
+    return ParamSpec((cfg.d_model,), ("embed",), "ones")
+
+
+def block_specs(cfg):
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln1": _norm_spec(cfg), "ssm": ssm.ssm_specs(cfg)}
+    ffn = moe.moe_specs(cfg) if cfg.family == "moe" else layers.mlp_specs(cfg)
+    return {"ln1": _norm_spec(cfg), "attn": attention.attn_specs(cfg),
+            "ln2": _norm_spec(cfg), "ffn": ffn}
+
+
+def shared_block_specs(cfg):
+    """zamba2's weight-shared transformer block (MHA + MLP)."""
+    return {"ln1": _norm_spec(cfg), "attn": attention.attn_specs(cfg),
+            "ln2": _norm_spec(cfg), "mlp": layers.mlp_specs(cfg)}
+
+
+def stack_specs(specs, n: int):
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.dtype), specs)
+
+
+def n_backbone_layers(cfg) -> int:
+    """Scanned backbone depth (hybrid: ssm layers only; `n_layers` counts
+    ssm layers + shared invocations)."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers * cfg.attn_every // (cfg.attn_every + 1)
+    return cfg.n_layers
+
+
+def n_shared_invocations(cfg) -> int:
+    if cfg.family != "hybrid":
+        return 0
+    return n_backbone_layers(cfg) // cfg.attn_every
+
+
+def lm_param_specs(cfg):
+    sp = {
+        "embed": layers.embed_specs(cfg),
+        "blocks": stack_specs(block_specs(cfg), n_backbone_layers(cfg)),
+        "final_norm": _norm_spec(cfg),
+    }
+    if not cfg.tie_embeddings:
+        sp["unembed"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                  ("embed", "vocab"), "scaled")
+    if cfg.family == "hybrid":
+        sp["shared"] = shared_block_specs(cfg)
+    return sp
+
+
+def _logits(x, params, cfg):
+    if cfg.tie_embeddings:
+        return layers.unembed(x, params["embed"], cfg).astype(jnp.float32)
+    return layers.dense(x, params["unembed"], cfg).astype(jnp.float32)
+
+
+def _group(tree, ninv: int, per: int):
+    """Reshape stacked-layer leaves (n, ...) -> (ninv, per, ...)."""
+    return jax.tree.map(lambda v: v.reshape((ninv, per) + v.shape[1:]), tree)
+
+
+# --------------------------------------------------------------------------
+# Block application
+# --------------------------------------------------------------------------
+
+
+def _apply_block(x, p, cfg, positions, key, cache=None, cache_length=None,
+                 cst=None):
+    """One backbone block (pre-norm residual). Returns (x, new_cache)."""
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_cache = ssm.ssm_block(layers.rms_norm(x, p["ln1"]), p["ssm"],
+                                     cfg, key, cache=cache, constrain=cst)
+        return x + h, new_cache
+    akey = None if key is None else jax.random.fold_in(key, 11)
+    h, new_cache = attention.attention_block(
+        layers.rms_norm(x, p["ln1"]), p["attn"], cfg, positions, akey,
+        cache=cache, cache_length=cache_length, constrain=cst)
+    x = x + h
+    fkey = None if key is None else jax.random.fold_in(key, 13)
+    if cfg.family == "moe":
+        h = moe.moe_ffn(layers.rms_norm(x, p["ln2"]), p["ffn"], cfg, fkey,
+                        constrain=cst)
+    else:
+        h = layers.mlp(layers.rms_norm(x, p["ln2"]), p["ffn"], cfg, fkey,
+                       constrain=cst)
+    return x + h, new_cache
+
+
+def _apply_shared(x, p, cfg, positions, key, cache=None, cache_length=None,
+                  cst=None):
+    akey = None if key is None else jax.random.fold_in(key, 17)
+    h, new_cache = attention.attention_block(
+        layers.rms_norm(x, p["ln1"]), p["attn"], cfg, positions, akey,
+        cache=cache, cache_length=cache_length, constrain=cst)
+    x = x + h
+    mkey = None if key is None else jax.random.fold_in(key, 19)
+    x = x + layers.mlp(layers.rms_norm(x, p["ln2"]), p["mlp"], cfg, mkey,
+                       constrain=cst)
+    return x, new_cache
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "full" else fn
+
+
+# --------------------------------------------------------------------------
+# Forward (train / eval over a full sequence)
+# --------------------------------------------------------------------------
+
+
+def _embed_inputs(params, inputs, cfg):
+    if cfg.frontend == "embeddings" and inputs.ndim == 3:
+        return inputs.astype(cfg.act_dtype)
+    return layers.embed(inputs, params["embed"]).astype(cfg.act_dtype)
+
+
+def encode(params, inputs, cfg, *, rng=None, constrain=None,
+           constrain_params=None):
+    """Backbone pass: inputs (tokens or stub embeddings) -> final hidden
+    states (b, s, d) after the last norm."""
+    cst = constrain or (lambda v, *a: v)
+    cstp = constrain_params or (lambda t: t)
+    x = _embed_inputs(params, inputs, cfg)
+    b, s = x.shape[:2]
+    x = cst(x, "batch", "resid_seq", None)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.family == "hybrid":
+        ninv, per = n_shared_invocations(cfg), cfg.attn_every
+        grouped = _group(params["blocks"], ninv, per)
+
+        def gbody(carry, group_params):
+            xc, idx = carry
+            for j in range(per):
+                lp = cstp(jax.tree.map(lambda v: v[j], group_params))
+                key = None if rng is None else jax.random.fold_in(rng, idx * per + j)
+                xc, _ = _apply_block(xc, lp, cfg, positions, key, cst=cst)
+            k2 = None if rng is None else jax.random.fold_in(rng, 10_000 + idx)
+            xc, _ = _apply_shared(xc, params["shared"], cfg, positions, k2,
+                                  cst=cst)
+            xc = cst(xc, "batch", "resid_seq", None)
+            return (xc, idx + 1), None
+
+        (x, _), _ = jax.lax.scan(_maybe_remat(gbody, cfg), (x, 0), grouped)
+    else:
+        def body(carry, layer_params):
+            xc, idx = carry
+            key = None if rng is None else jax.random.fold_in(rng, idx)
+            xc, _ = _apply_block(xc, cstp(layer_params), cfg, positions, key,
+                                 cst=cst)
+            xc = cst(xc, "batch", "resid_seq", None)
+            return (xc, idx + 1), None
+
+        (x, _), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, 0),
+                                 params["blocks"])
+
+    return layers.rms_norm(x, params["final_norm"])
+
+
+def forward(params, inputs, cfg, *, rng=None, constrain=None,
+            constrain_params=None):
+    """Full logits (b, s, vocab). Prefer lm_loss for training: it never
+    materializes the whole logits tensor."""
+    cst = constrain or (lambda v, *a: v)
+    x = encode(params, inputs, cfg, rng=rng, constrain=constrain,
+               constrain_params=constrain_params)
+    logits = _logits(x, params, cfg)
+    return cst(logits, "batch", "seq", "vocab")
+
+
+LOSS_SEQ_CHUNK = 1024
+
+
+def lm_loss(params, batch, cfg, *, rng=None, constrain=None,
+            constrain_params=None):
+    """Causal next-token cross-entropy, sequence-chunked.
+
+    The (tokens, vocab) logits tensor is the largest activation in any LM
+    step, and it only feeds a reduction — so the unembed + log-softmax +
+    gather runs per sequence chunk inside a remat'd scan: peak memory drops
+    from O(s·vocab) to O(chunk·vocab), and the backward recomputes each
+    chunk's logits instead of keeping them alive.
+    """
+    x = encode(params, batch["inputs"], cfg, rng=rng, constrain=constrain,
+               constrain_params=constrain_params)
+    labels = batch["labels"]
+    b, s, d = x.shape
+    c = min(LOSS_SEQ_CHUNK, s)
+    if s % c:
+        c = s                      # irregular lengths: single chunk
+    nc = s // c
+    xc = jnp.moveaxis(x.reshape(b, nc, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def chunk_nll(carry, inp):
+        xi, li = inp                               # (b,c,d), (b,c)
+        logits = _logits(xi, params, cfg)          # (b,c,vocab) f32
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, li[..., None], axis=-1)[..., 0]
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(chunk_nll, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+# --------------------------------------------------------------------------
+# KV / SSM cache
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    """Stacked per-layer decode cache (leading axis = backbone layer or
+    shared invocation)."""
+    dtype = dtype or cfg.act_dtype
+    n = n_backbone_layers(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.family in ("ssm", "hybrid"):
+        one = ssm.init_ssm_cache(cfg, batch, dtype)
+        cache = {"ssm": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (n,) + v.shape).copy(), one)}
+        if cfg.family == "hybrid":
+            ninv = n_shared_invocations(cfg)
+            cache["shared_k"] = jnp.zeros((ninv, batch, max_len, kvh, hd),
+                                          dtype)
+            cache["shared_v"] = jnp.zeros((ninv, batch, max_len, kvh, hd),
+                                          dtype)
+        return cache
+    return {"k": jnp.zeros((n, batch, max_len, kvh, hd), dtype),
+            "v": jnp.zeros((n, batch, max_len, kvh, hd), dtype)}
+
+
+# --------------------------------------------------------------------------
+# Decode (one token per sequence) — what `serve_step` lowers
+# --------------------------------------------------------------------------
+
+
+def decode_step(params, cache, tokens, lengths, cfg, *, rng=None,
+                constrain=None, constrain_params=None):
+    """tokens: (b,) next input ids; lengths: (b,) current cache fill (the new
+    token writes at that index). Returns (logits (b, vocab), new_cache)."""
+    cst = constrain or (lambda v, *a: v)
+    cstp = constrain_params or (lambda t: t)
+    x = layers.embed(tokens, params["embed"]).astype(cfg.act_dtype)[:, None]
+    positions = lengths[:, None]
+    new_lengths = lengths + 1
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "hybrid":
+            ninv, per = n_shared_invocations(cfg), cfg.attn_every
+            grouped = _group(params["blocks"], ninv, per)
+            gcache = _group(cache["ssm"], ninv, per)
+
+            def gbody(carry, scanned):
+                xc, idx = carry
+                gp, gc, kc, vc = scanned
+                new_ssm = []
+                for j in range(per):
+                    lp = cstp(jax.tree.map(lambda v: v[j], gp))
+                    lc = jax.tree.map(lambda v: v[j], gc)
+                    key = (None if rng is None
+                           else jax.random.fold_in(rng, idx * per + j))
+                    xc, nc = _apply_block(xc, lp, cfg, positions, key,
+                                          cache=lc, cst=cst)
+                    new_ssm.append(nc)
+                new_ssm = jax.tree.map(lambda *vs: jnp.stack(vs), *new_ssm)
+                k2 = (None if rng is None
+                      else jax.random.fold_in(rng, 10_000 + idx))
+                xc, (kc2, vc2) = _apply_shared(
+                    xc, params["shared"], cfg, positions, k2, cache=(kc, vc),
+                    cache_length=new_lengths, cst=cst)
+                return (xc, idx + 1), (new_ssm, kc2, vc2)
+
+            (x, _), (new_ssm_g, k_new, v_new) = jax.lax.scan(
+                gbody, (x, 0),
+                (grouped, gcache, cache["shared_k"], cache["shared_v"]))
+            n = n_backbone_layers(cfg)
+            new_cache = {
+                "ssm": jax.tree.map(
+                    lambda v: v.reshape((n,) + v.shape[2:]), new_ssm_g),
+                "shared_k": k_new, "shared_v": v_new,
+            }
+        else:
+            def body(carry, scanned):
+                xc, idx = carry
+                lp, lc = scanned
+                key = None if rng is None else jax.random.fold_in(rng, idx)
+                xc, nc = _apply_block(xc, cstp(lp), cfg, positions, key,
+                                      cache=lc, cst=cst)
+                return (xc, idx + 1), nc
+
+            (x, _), new_ssm = jax.lax.scan(body, (x, 0),
+                                           (params["blocks"], cache["ssm"]))
+            new_cache = {"ssm": new_ssm}
+    else:
+        def body(carry, scanned):
+            xc, idx = carry
+            lp, kc, vc = scanned
+            key = None if rng is None else jax.random.fold_in(rng, idx)
+            xc, (kc2, vc2) = _apply_block(xc, cstp(lp), cfg, positions, key,
+                                          cache=(kc, vc),
+                                          cache_length=new_lengths, cst=cst)
+            return (xc, idx + 1), (kc2, vc2)
+
+        (x, _), (k_new, v_new) = jax.lax.scan(
+            body, (x, 0), (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new}
+
+    x = layers.rms_norm(x, params["final_norm"])
+    logits = _logits(x[:, 0], params, cfg)
+    return cst(logits, "batch", "vocab"), new_cache
+
+
+# --------------------------------------------------------------------------
+# Prefill — builds the cache from a prompt; what the prefill shapes lower
+# --------------------------------------------------------------------------
+
+
+def prefill(params, inputs, cfg, max_len: int, *, rng=None, constrain=None,
+            constrain_params=None):
+    """Run the prompt through the model, returning (last-token logits, cache,
+    lengths). inputs: (b, s) tokens or (b, s, d) embeddings; s <= max_len."""
+    cst = constrain or (lambda v, *a: v)
+    cstp = constrain_params or (lambda t: t)
+    x = _embed_inputs(params, inputs, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+
+    def pad_kv(kv):
+        k, v = kv
+        kp = jnp.zeros((b, max_len, kvh, hd), k.dtype)
+        vp = jnp.zeros((b, max_len, kvh, hd), v.dtype)
+        kp = jax.lax.dynamic_update_slice(kp, k, (0, 0, 0, 0))
+        vp = jax.lax.dynamic_update_slice(vp, v, (0, 0, 0, 0))
+        return kp, vp
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.family == "hybrid":
+            ninv, per = n_shared_invocations(cfg), cfg.attn_every
+            grouped = _group(params["blocks"], ninv, per)
+
+            def gbody(carry, gp):
+                xc, idx = carry
+                caches = []
+                for j in range(per):
+                    lp = cstp(jax.tree.map(lambda v: v[j], gp))
+                    key = (None if rng is None
+                           else jax.random.fold_in(rng, idx * per + j))
+                    xc, nc = _apply_block(xc, lp, cfg, positions, key,
+                                          cache="prefill", cst=cst)
+                    caches.append(nc)
+                ssm_c = jax.tree.map(lambda *vs: jnp.stack(vs), *caches)
+                k2 = (None if rng is None
+                      else jax.random.fold_in(rng, 10_000 + idx))
+                xc, kv = _apply_shared(xc, params["shared"], cfg, positions,
+                                       k2, cst=cst)
+                kp, vp = pad_kv(kv)
+                return (xc, idx + 1), (ssm_c, kp, vp)
+
+            (x, _), (ssm_g, kp, vp) = jax.lax.scan(
+                _maybe_remat(gbody, cfg), (x, 0), grouped)
+            n = n_backbone_layers(cfg)
+            cache = {"ssm": jax.tree.map(
+                lambda v: v.reshape((n,) + v.shape[2:]), ssm_g),
+                "shared_k": kp, "shared_v": vp}
+        else:
+            def body(carry, lp):
+                xc, idx = carry
+                key = None if rng is None else jax.random.fold_in(rng, idx)
+                xc, nc = _apply_block(xc, cstp(lp), cfg, positions, key,
+                                      cache="prefill", cst=cst)
+                return (xc, idx + 1), nc
+
+            (x, _), ssm_c = jax.lax.scan(_maybe_remat(body, cfg), (x, 0),
+                                         params["blocks"])
+            cache = {"ssm": ssm_c}
+    else:
+        def body(carry, lp):
+            xc, idx = carry
+            key = None if rng is None else jax.random.fold_in(rng, idx)
+            xc, kv = _apply_block(xc, cstp(lp), cfg, positions, key, cst=cst)
+            kp, vp = pad_kv(kv)
+            return (xc, idx + 1), (kp, vp)
+
+        (x, _), (k_all, v_all) = jax.lax.scan(_maybe_remat(body, cfg), (x, 0),
+                                              params["blocks"])
+        cache = {"k": k_all, "v": v_all}
+
+    x = layers.rms_norm(x, params["final_norm"])
+    logits = _logits(x[:, -1], params, cfg)
+    lengths = jnp.full((b,), s, jnp.int32)
+    return cst(logits, "batch", "vocab"), cache, lengths

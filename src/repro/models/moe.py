@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with capacity-bounded sort dispatch (EP-ready).
+
+Design notes (these choices are what make the 400B config lower cleanly):
+
+* Routing, sort, and capacity bookkeeping happen **per batch row** (axis 0
+  stays the data-sharded batch), so the sort is a local operation per shard —
+  no global argsort collectives appear in the HLO.
+* Dispatch is gather-based (Megablocks-style capacity buffers), NOT the
+  GShard one-hot-einsum formulation: the (tokens × experts × capacity)
+  dispatch tensor is never materialized and no fake dispatch-FLOPs pollute
+  the roofline (MODEL_FLOPS/HLO_FLOPs stays honest).
+* Expert weights carry the "experts" logical axis -> TP/EP over the model
+  mesh axis; the capacity buffer gets a sharding constraint on its expert
+  axis, which XLA resolves into the canonical MoE all-to-all.
+* Top-k gates are renormalized; overflow beyond the capacity factor drops
+  tokens (standard capacity semantics; cf defaults to 1.25).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    sp = {
+        "router": ParamSpec((d, e), ("embed", None), "scaled"),
+        # EP owns the model axis via "experts"; the expert-internal FFN dim
+        # uses its own logical axis ("expert_mlp" -> replicated) since one
+        # mesh axis cannot shard two dims of the same tensor.
+        "wi": ParamSpec((e, d, 2 * f), ("experts", "embed", "expert_mlp"),
+                        "scaled"),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed"),
+                        "scaled"),
+    }
+    if cfg.shared_expert:
+        sp["shared"] = layers.mlp_specs(cfg)
+    return sp
+
+
+def capacity(cfg, tokens_per_row: int) -> int:
+    c = int(tokens_per_row * cfg.top_k * cfg.capacity_factor
+            / max(cfg.n_experts, 1))
+    return max(8, -(-c // 8) * 8)          # round up to a multiple of 8
+
+
+def moe_ffn(x, p, cfg, key=None, constrain=None):
+    """x: (b, s, d) -> (b, s, d). ``constrain(x, *logical_axes)`` optional."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = capacity(cfg, s)
+    cst = constrain or (lambda v, *a: v)
+
+    router_logits = jnp.dot(x.astype(jnp.float32),
+                            p["router"].astype(jnp.float32))   # (b, s, e)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                      # (b, s, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-row capacity assignment via local sort --------------------
+    flat_e = eidx.reshape(b, s * k)                            # (b, sk)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)          # (b, sk)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    rank = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        first, sorted_e, axis=-1)                              # pos in expert
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)     # drop -> slot E*C
+    token = order // k                                         # source token
+
+    # --- dispatch: (b, e, cap, d) capacity buffers ----------------------
+    xg = jnp.take_along_axis(x, token[..., None], axis=1)      # (b, sk, d)
+    buf = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    buf = jax.vmap(lambda bf, sl, xv: bf.at[sl].set(xv))(buf, slot, xg)
+    buf = buf[:, : e * cap].reshape(b, e, cap, d)
+    buf = cst(buf, "batch", "experts", None, None)             # EP a2a here
+
+    # --- expert FFN (SwiGLU), experts sharded over `model` --------------
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(buf.dtype))
+    gate, up = jnp.split(h, 2, axis=-1)
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(buf.dtype) * up
+    y = jnp.einsum("becf,efd->becd", act, p["wo"].astype(buf.dtype))
+    y = cst(y, "batch", "experts", None, None)
+
+    # --- combine: gather back per (token, k) slot, weight, scatter-add --
+    yflat = jnp.pad(y.reshape(b, e * cap, d), ((0, 0), (0, 1), (0, 0)))
+    ytk = jax.vmap(lambda yf, sl: yf[sl])(yflat, slot)         # (b, sk, d)
+    gate_sorted = jnp.take_along_axis(gates.reshape(b, s * k), order, axis=-1)
+    ytk = ytk * gate_sorted[..., None].astype(ytk.dtype)
+    out = jnp.zeros((b, s, d), x.dtype)
+    out = jax.vmap(lambda ob, tk, yv: ob.at[tk].add(yv))(out, token, ytk)
+
+    if cfg.shared_expert:
+        out = out + layers.mlp(x, p["shared"], cfg, key)
+    return out
+
+
+def load_balancing_loss(router_probs, eidx, n_experts: int):
+    """Switch-style aux loss: E · Σ_e f_e · P_e (optional, train.py wires it)."""
+    b, s, k = eidx.shape
+    counts = jnp.zeros((n_experts,)).at[eidx.reshape(-1)].add(1.0)
+    f = counts / (b * s * k)
+    pmean = router_probs.mean(axis=(0, 1))
+    return n_experts * jnp.sum(f * pmean)

@@ -1,0 +1,99 @@
+"""Parameter declaration system: shapes + logical axes in one place.
+
+Every module declares its parameters as a pytree of :class:`ParamSpec`
+(shape, per-dimension *logical axis names*, initializer). From that single
+declaration the framework derives
+
+  * materialized parameters        (``init_params`` — real training)
+  * ShapeDtypeStruct stand-ins     (``abstract_params`` — the dry-run)
+  * ``PartitionSpec`` trees        (``partition_specs`` + sharding rules)
+
+which keeps model code, distribution config, and the launcher from ever
+disagreeing about a tensor's layout (the MaxText "logical axis rules"
+pattern, reimplemented minimally).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple          # logical axis name (or None) per dimension
+    init: str = "normal"  # normal | zeros | ones | scaled (fan-in)
+    dtype: Any = None     # overrides the model-wide param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(f, tree):
+    return jax.tree.map(f, tree, is_leaf=_is_spec)
+
+
+def init_params(key, specs, dtype=jnp.float32):
+    """Materialize a ParamSpec tree into real arrays."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = s.dtype or dtype
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, dt)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, dt)
+        elif s.init == "scaled":
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            v = (jax.random.normal(k, s.shape, jnp.float32)
+                 * (1.0 / math.sqrt(fan_in))).astype(dt)
+        else:
+            v = (jax.random.normal(k, s.shape, jnp.float32) * 0.02).astype(dt)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — no allocation; what the dry-run lowers with."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype), specs)
+
+
+def partition_specs(specs, rules: dict):
+    """Map logical axes -> mesh axes per ``rules`` ({logical: mesh|None}).
+
+    A logical axis missing from the rules maps to None (replicated). A rule
+    is dropped for a given tensor dimension if the dimension size does not
+    divide evenly over the mesh axis — the caller passes mesh axis sizes via
+    rules' companion ``sizes`` entry (see sharding/rules.py helpers).
+    """
+    sizes = rules.get("__sizes__", {})
+
+    def one(s: ParamSpec):
+        entries = []
+        for dim, ax in zip(s.shape, s.axes):
+            mesh_ax = rules.get(ax)
+            if mesh_ax is None:
+                entries.append(None)
+                continue
+            size = sizes.get(mesh_ax)
+            if isinstance(mesh_ax, tuple):
+                size = math.prod(sizes.get(a, 1) for a in mesh_ax)
+            if size and dim % size != 0:
+                entries.append(None)       # indivisible -> replicate this dim
+            else:
+                entries.append(mesh_ax)
+        return PartitionSpec(*entries)
+
+    return tree_map_specs(one, specs)

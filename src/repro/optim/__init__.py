@@ -1,0 +1,2 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, cosine_lr)

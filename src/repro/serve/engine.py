@@ -1,0 +1,122 @@
+"""Batched serving engine: continuous batching over a fixed slot grid.
+
+The engine owns a KV/SSM cache with ``slots`` batch rows. Each slot holds
+one in-flight request; when a request finishes (EOS or max tokens), the slot
+is immediately refilled from the queue — decode never stalls on stragglers
+in the batch (continuous batching). Admission runs prefill for the incoming
+prompt with batch=1 and splices the resulting cache into the slot's batch
+row; decode steps run for all slots at once (the serve_step the dry-run
+lowers). Sampling: greedy or temperature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list            # token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4
+    max_len: int = 256
+    eos_id: int = 2
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, params, cfg, scfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.cache = lm.init_cache(cfg, scfg.slots, scfg.max_len)
+        self.lengths = jnp.zeros((scfg.slots,), jnp.int32)
+        self.last_token = jnp.zeros((scfg.slots,), jnp.int32)
+        self.active = [None] * scfg.slots       # slot -> Request | None
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._rng = jax.random.PRNGKey(scfg.seed)
+        self._decode = jax.jit(partial(lm.decode_step, cfg=cfg))
+        self._prefill = jax.jit(
+            partial(lm.prefill, cfg=cfg, max_len=scfg.max_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _splice_slot(self, slot: int, cache1, length, last_tok):
+        """Write a batch=1 prefill cache into batch row ``slot``."""
+        def put(full, one):
+            # full: (layers, slots, ...); one: (layers, 1, ...)
+            return jax.lax.dynamic_update_slice_in_dim(full, one.astype(
+                full.dtype), slot, axis=1)
+        self.cache = jax.tree.map(put, self.cache, cache1)
+        self.lengths = self.lengths.at[slot].set(length)
+        self.last_token = self.last_token.at[slot].set(last_tok)
+
+    def _admit(self):
+        for slot in range(self.scfg.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                prompt = jnp.asarray([req.prompt], jnp.int32)
+                logits, cache1, lens = self._prefill(self.params, prompt)
+                tok = self._sample(logits, req.temperature)
+                req.generated.append(int(tok[0]))
+                self.active[slot] = req
+                self._splice_slot(slot, cache1, int(lens[0]), int(tok[0]))
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._rng, k = jax.random.split(self._rng)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit, batched decode, harvest finished."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        logits, self.cache = self._decode(
+            self.params, self.cache, self.last_token, self.lengths)
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if r is not None else 0 for r in self.active], jnp.int32)
+        toks = self._sample(logits, max(
+            (r.temperature for r in self.active if r), default=0.0))
+        self.last_token = toks
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(toks[slot])
+            req.generated.append(tok)
+            hit_eos = tok == self.scfg.eos_id
+            hit_max = len(req.generated) >= req.max_new_tokens
+            hit_cap = int(self.lengths[slot]) >= self.scfg.max_len - 1
+            if hit_eos or hit_max or hit_cap:
+                req.done = True
+                self.finished.append(req)
+                self.active[slot] = None
+                self.lengths = self.lengths.at[slot].set(0)
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

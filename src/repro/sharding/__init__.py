@@ -1,0 +1,2 @@
+from repro.sharding.rules import (  # noqa: F401
+    ACT_RULES, PARAM_RULES, act_spec, logical_rules, param_partition_specs)

@@ -1,0 +1,102 @@
+"""Logical-axis -> mesh-axis sharding rules (FSDP × TP × EP × SP).
+
+The production mesh is ``(data, model)`` per pod, with an optional leading
+``pod`` axis (pure data parallel across pods — slow DCI links, so only
+batch and gradient-reduction traffic crosses it).
+
+Parameter rules implement **FSDP ∘ TP**: every weight tensor is sharded on
+two independent axes — its "parallelism" axis (heads / mlp / experts /
+vocab → ``model``) and its embed axis (→ ``data``), giving full 256-way
+sharding of all large tensors. Indivisible dims fall back to replication
+per-tensor (params.partition_specs handles that), so e.g. a 2-head KV
+projection simply replicates its head dim while staying data-sharded on
+embed.
+
+Activation rules implement DP on batch (pod × data), TP on
+heads/mlp/experts, and SP on the long-context cache sequence axis.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models import params as params_lib
+
+# Parameter logical axes.
+PARAM_RULES = {
+    "embed": "data",          # FSDP shard dimension
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",      # falls back to replicated when indivisible
+    "head_dim": None,
+    "kv_embed": "model",      # KV proj: TP moves to embed when kv_heads small
+    "experts": "model",
+    "expert_mlp": None,       # expert-internal FFN dim (EP owns model)
+    "layers": None,           # stacked-scan leading axis — never sharded
+    "ssm_state": None,
+    "ssm_inner": "model",
+    "conv": None,
+    None: None,
+}
+
+# Activation logical axes.
+ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # Megatron-style sequence parallelism: the residual stream BETWEEN layers
+    # shards its sequence over the TP axis (in-layer tensors keep full
+    # sequences and shard heads/mlp instead). This keeps the remat-saved
+    # per-layer activation stacks (n_layers, b, s, d) model_parallel-times
+    # smaller — EXPERIMENTS §Perf iteration 2. Indivisible lengths fall back
+    # to replicated per-tensor via make_constrain's divisibility check.
+    "resid_seq": "model",
+    "cache_seq": "data",      # SP: long-context KV cache sharded over data
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "vocab": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    None: None,
+}
+
+
+def logical_rules(mesh, kind: str = "param") -> dict:
+    """Rules dict + mesh axis sizes (so indivisible dims can replicate)."""
+    base = dict(PARAM_RULES if kind == "param" else ACT_RULES)
+    sizes = dict(mesh.shape)   # works for Mesh and AbstractMesh
+    if "pod" not in sizes:
+        # single-pod mesh: batch rule must not reference the pod axis
+        if kind == "act":
+            base["batch"] = "data"
+    base["__sizes__"] = sizes
+    return base
+
+
+def param_partition_specs(specs, mesh):
+    return params_lib.partition_specs(specs, logical_rules(mesh, "param"))
+
+
+def param_shardings(specs, mesh):
+    return params_lib.tree_map_specs(
+        lambda ps: NamedSharding(mesh, ps),
+        param_partition_specs(specs, mesh))
+
+
+def act_spec(mesh, *axes) -> PartitionSpec:
+    """PartitionSpec for an activation from logical axis names."""
+    rules = logical_rules(mesh, "act")
+    sizes = rules["__sizes__"]
+    entries = []
+    for ax in axes:
+        mesh_ax = rules.get(ax)
+        if isinstance(mesh_ax, tuple):
+            mesh_ax = tuple(a for a in mesh_ax if a in sizes) or None
+        elif mesh_ax is not None and mesh_ax not in sizes:
+            mesh_ax = None
+        entries.append(mesh_ax)
+    return PartitionSpec(*entries)

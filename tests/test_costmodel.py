@@ -1,0 +1,93 @@
+"""Cost-model tests: the paper's §V headline numbers must emerge."""
+
+import pytest
+
+from repro.core import costmodel as cm
+
+
+def test_fig9a_speedup_vs_sc():
+    """'up to 4x improvement in performance compared with conventional SC'."""
+    r = cm.headline_ratios(10)
+    assert 3.0 <= r["speedup_vs_sc"] <= 5.0
+
+
+def test_fig9a_speedup_vs_pim():
+    """'18x speedup over implementing MUL with only in-memory bitwise
+    Boolean logic operations'."""
+    r = cm.headline_ratios(10)
+    assert 15.0 <= r["speedup_vs_pim"] <= 21.0
+
+
+def test_fig10_energy_saving_vs_sc():
+    """'consumes 58 % less energy compared with the SC method'."""
+    r = cm.headline_ratios(10)
+    assert 0.45 <= r["energy_saving_vs_sc"] <= 0.70
+
+
+def test_fig11_area_order_of_magnitude():
+    """'area overhead is smaller by about one order of magnitude'."""
+    r = cm.headline_ratios(10)
+    assert 5.0 <= r["area_ratio_sc_over_ours"] <= 20.0
+
+
+def test_fig9b_scpim_cycles_flat_in_bitlength():
+    """SC+PIM cycle count is ~flat vs operand bits (parallel generation)."""
+    c8 = cm.cycles_scpim_apc(8)
+    c12 = cm.cycles_scpim_apc(12)
+    assert c12 <= 4 * c8  # sublinear growth (rows grow, pulses don't)
+
+
+def test_fig9b_pim_cycles_grow_fast():
+    """PIM MUL cycles grow super-linearly with bit length (quadratic
+    shift-add; the paper says 'can increase exponentially')."""
+    assert cm.cycles_pim(8) == 143  # DRISA anchor
+    assert cm.cycles_pim(16) >= 4 * cm.cycles_pim(8) * 0.9
+    # crossover: SC+PIM advantage grows with bit length
+    adv10 = cm.cycles_pim(10) / cm.cycles_scpim_apc(10)
+    adv16 = cm.cycles_pim(16) / cm.cycles_scpim_apc(16)
+    assert adv16 > adv10
+
+
+def test_fig10_init_dominates_scpim_energy():
+    """The preset (initialization) step costs more than the SC pulses
+    (stronger + longer pulse) — paper Fig. 10 discussion."""
+    _, bd = cm.energy_scpim(10, "apc")
+    assert bd["init"] > bd["sc_pulses"] / 2
+    assert bd["init"] > bd["conversion"]
+
+
+def test_fig10_sc_buffering_dominates():
+    """~88 % of conventional-SC energy is buffering-related."""
+    total, bd = cm.energy_sc(10)
+    assert bd["buffering"] / total > 0.80
+
+
+def test_fig11_sng_dominates_sc_area():
+    """SNG occupies 95 % of conventional SC area."""
+    total, bd = cm.area_sc(10)
+    assert bd["sng"] / total == pytest.approx(0.95, abs=0.01)
+
+
+def test_fig11_lut_shrinks_with_bitlength():
+    a10, bd10 = cm.area_scpim(10)
+    a8, bd8 = cm.area_scpim(8)
+    assert bd8["lut"] == pytest.approx(bd10["lut"] / 4)
+
+
+def test_csa_variant_trades_cycles_for_area():
+    """CSA pop-count: smaller area than APC variant, more cycles."""
+    a_apc, _ = cm.area_scpim(10, "apc")
+    a_csa, _ = cm.area_scpim(10, "csa")
+    assert a_csa < a_apc
+    assert cm.cycles_scpim_csa(10, 100) > cm.cycles_scpim_apc(10)
+
+
+def test_csa_amortizes_with_mac_length():
+    assert cm.cycles_scpim_csa(10, 1000) < cm.cycles_scpim_csa(10, 10)
+
+
+def test_full_comparison_structure():
+    table = cm.full_comparison()
+    assert set(table) == {"SC+PIM (APC)", "SC+PIM (CSA)", "SC", "PIM"}
+    for v in table.values():
+        assert v.cycles > 0 and v.energy_pj > 0 and v.area_um2 > 0

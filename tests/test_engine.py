@@ -1,0 +1,113 @@
+"""Bit-exact MRAM engine tests, incl. the paper's Fig. 7 statistics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conversion, engine
+
+CFG = engine.EngineConfig(nbit=1024)
+
+
+def test_preset_all_ones():
+    s = engine.preset((4, 128))
+    assert s.dtype == jnp.uint8
+    assert int(s.sum()) == 4 * 128
+
+
+def test_pulse_zero_duration_is_noop(key):
+    s = engine.preset((2, 256))
+    s2 = engine.apply_pulse(key, s, 0.0)
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s))
+
+
+def test_pulse_only_switches_toward_zero(key):
+    """A stochastic pulse can only clear bits, never set them (Fig. 5
+    polarity) — cells at 0 stay 0."""
+    s = jnp.zeros((2, 256), jnp.uint8)
+    s2 = engine.apply_pulse(key, s, 0.5)
+    assert int(s2.sum()) == 0
+
+
+def test_sc_multiply_shapes_and_range(key):
+    x = jnp.array([100, 512, 1023])
+    y = jnp.array([512, 512, 1023])
+    p_est, prod = engine.sc_multiply(key, x, y, CFG)
+    assert p_est.shape == (3,) and prod.shape == (3,)
+    assert np.all(np.asarray(p_est) >= 0) and np.all(np.asarray(p_est) <= 1)
+
+
+def test_sc_multiply_mean_is_unbiased(key):
+    """E[p_est] = P_X·P_Y: the error distribution is zero-centered
+    (paper Fig. 7a). Averaged over many iterations the bias must be well
+    below the single-MUL sigma."""
+    x, y = 400, 700
+    iters = 400
+    keys = jax.random.split(key, iters)
+    p_est, _ = jax.vmap(lambda k: engine.sc_multiply(k, x, y, CFG))(keys)
+    p_true = float(conversion.quantized_product_probability(x, y, CFG.conv))
+    bias = float(jnp.mean(p_est)) - p_true
+    sigma = float(jnp.std(p_est))
+    assert abs(bias) < 3 * sigma / np.sqrt(iters) + 1e-4
+
+
+@pytest.mark.slow
+def test_fig7a_sigma_at_nbit_1000(key):
+    """Paper Fig. 7a: with nbit=1000, tau_X=0.3 ns, tau_Y=0.4 ns the MUL
+    uncertainty is sigma ~ 1.6 % (binomial: sqrt(p(1-p)/n) with
+    p = e^-0.7 ~ 0.497 -> 1.58 %)."""
+    cfg = engine.EngineConfig(nbit=1000)
+    iters = 1000
+    keys = jax.random.split(key, iters)
+    p = jax.vmap(
+        lambda k: engine.readout(
+            engine.sc_multiply_states(k, 0.3, 0.4, cfg)))(keys)
+    sigma = float(jnp.std(p))
+    assert 0.013 < sigma < 0.019  # 1.6 % +/- measurement slack
+    # zero-centered error (no intrinsic bias)
+    p_true = float(np.exp(-0.7))
+    assert abs(float(jnp.mean(p)) - p_true) < 0.002
+
+
+@pytest.mark.slow
+def test_fig7b_sigma_scales_inverse_sqrt_nbit(key):
+    """sigma halves per 4x nbit (binomial counting statistics)."""
+    sigmas = {}
+    for nbit in (256, 1024, 4096):
+        cfg = engine.EngineConfig(nbit=nbit)
+        keys = jax.random.split(jax.random.fold_in(key, nbit), 400)
+        p = jax.vmap(
+            lambda k: engine.readout(
+                engine.sc_multiply_states(k, 0.3, 0.4, cfg)))(keys)
+        sigmas[nbit] = float(jnp.std(p))
+    r1 = sigmas[256] / sigmas[1024]
+    r2 = sigmas[1024] / sigmas[4096]
+    assert 1.6 < r1 < 2.5 and 1.6 < r2 < 2.5
+
+
+def test_fig7b_sigma_independent_of_input(key):
+    """sigma is nearly flat in tau_Y (Fig. 7b): binomial sigma depends only
+    weakly on p around the operating range."""
+    cfg = engine.EngineConfig(nbit=1024)
+    sig = []
+    for tau_y in (0.2, 0.4, 0.6):
+        keys = jax.random.split(jax.random.fold_in(key, int(tau_y * 10)), 300)
+        p = jax.vmap(
+            lambda k: engine.readout(
+                engine.sc_multiply_states(k, 0.3, tau_y, cfg)))(keys)
+        sig.append(float(jnp.std(p)))
+    assert max(sig) / min(sig) < 1.6
+
+
+def test_mac_rows_states_shape(key):
+    w = jnp.array([10, 20, 30, 40])
+    x = jnp.array([50, 60, 70, 80])
+    states = engine.mac_rows(key, w, x, CFG)
+    assert states.shape == (4, CFG.nbit)
+    assert states.dtype == jnp.uint8
+
+
+def test_rows_per_mul():
+    assert engine.EngineConfig(nbit=1024, row_length=256).rows_per_mul == 4
+    assert engine.EngineConfig(nbit=100, row_length=256).rows_per_mul == 1

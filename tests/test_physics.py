@@ -1,0 +1,92 @@
+"""Unit + property tests for the Eq. 3 switching physics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import physics
+
+
+def test_operating_point_collapses_to_exp():
+    """At I = I_c the inner exponential is 1: P_usw = exp(-tau)."""
+    tau = jnp.linspace(0.01, 5.0, 64)
+    p = physics.p_unswitched(tau, physics.I_C_UA)
+    np.testing.assert_allclose(np.asarray(p), np.exp(-np.asarray(tau)),
+                               rtol=1e-6)
+
+
+def test_preset_pulse_switches_deterministically():
+    """The preset pulse (over-driven, long) leaves P_usw ~ 0."""
+    p = physics.p_unswitched(physics.PRESET_TAU_NS,
+                             physics.I_C_UA * physics.PRESET_I_FACTOR)
+    assert float(p) < 1e-12
+
+
+@given(tau=st.floats(0.01, 10.0), i=st.floats(40.0, 120.0))
+@settings(max_examples=200, deadline=None)
+def test_p_unswitched_in_unit_interval(tau, i):
+    p = float(physics.p_unswitched(tau, i))
+    assert 0.0 <= p <= 1.0
+
+
+@given(tau=st.floats(0.01, 5.0),
+       i1=st.floats(40.0, 119.0), di=st.floats(0.5, 20.0))
+@settings(max_examples=200, deadline=None)
+def test_monotone_decreasing_in_current(tau, i1, di):
+    """Stronger current -> more switching -> lower survival."""
+    p1 = float(physics.p_unswitched(tau, i1))
+    p2 = float(physics.p_unswitched(tau, i1 + di))
+    assert p2 <= p1 + 1e-12
+
+
+@given(tau1=st.floats(0.01, 5.0), dt=st.floats(0.01, 5.0),
+       i=st.floats(60.0, 100.0))
+@settings(max_examples=200, deadline=None)
+def test_monotone_decreasing_in_duration(tau1, dt, i):
+    p1 = float(physics.p_unswitched(tau1, i))
+    p2 = float(physics.p_unswitched(tau1 + dt, i))
+    assert p2 <= p1 + 1e-12
+
+
+@given(p=st.floats(1e-6, 1.0 - 1e-6))
+@settings(max_examples=200, deadline=None)
+def test_tau_inversion_roundtrip(p):
+    """tau_for_probability inverts Eq. 3 at the operating point."""
+    tau = physics.tau_for_probability(p)
+    p_back = float(physics.p_unswitched(tau, physics.I_C_UA))
+    assert abs(p_back - p) < 1e-5
+
+
+def test_two_pulse_and_equals_product():
+    """Survival of two sequential pulses multiplies (independent events) —
+    the algebraic identity the whole MUL design rests on."""
+    ta, tb = 0.3, 0.4
+    pa = physics.p_unswitched(ta, physics.I_C_UA)
+    pb = physics.p_unswitched(tb, physics.I_C_UA)
+    pab = physics.p_unswitched(ta + tb, physics.I_C_UA)
+    np.testing.assert_allclose(float(pa * pb), float(pab), rtol=1e-6)
+
+
+def test_scale_to_half_switching_targets_half():
+    tau = jnp.array([0.1, 0.2, 0.3, 0.4])
+    scale, scaled = physics.scale_to_half_switching(tau)
+    mean_p = float(jnp.exp(-jnp.mean(scaled)))
+    np.testing.assert_allclose(mean_p, 0.5, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(scaled), np.asarray(tau * scale))
+
+
+def test_switching_energy_scales_with_tau_and_current():
+    e1 = float(physics.switching_energy_aj(1.0, 80.0))
+    e2 = float(physics.switching_energy_aj(2.0, 80.0))
+    e3 = float(physics.switching_energy_aj(1.0, 160.0))
+    np.testing.assert_allclose(e2, 2 * e1, rtol=1e-6)
+    np.testing.assert_allclose(e3, 4 * e1, rtol=1e-6)
+
+
+def test_per_cell_ic_array_broadcasts():
+    ic = jnp.array([70.0, 80.0, 90.0])
+    p = physics.p_unswitched(0.5, 80.0, i_c_ua=ic)
+    assert p.shape == (3,)
+    # higher I_c relative to drive -> less switching -> higher survival
+    assert float(p[2]) > float(p[1]) > float(p[0])

@@ -1,0 +1,76 @@
+"""Pop-count strategies: functional equality + cycle-model properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import popcount
+
+
+def _random_bits(seed, shape):
+    return jax.random.bernoulli(
+        jax.random.PRNGKey(seed), 0.5, shape).astype(jnp.uint8)
+
+
+@given(seed=st.integers(0, 2**16), m=st.integers(1, 12),
+       nbit=st.integers(1, 300))
+@settings(max_examples=60, deadline=None)
+def test_apc_equals_csa_fa(seed, m, nbit):
+    """Both pop-count strategies return the exact same MAC sum."""
+    states = _random_bits(seed, (m, nbit))
+    apc_total = int(popcount.apc_popcount(states).sum())
+    csa_total = int(popcount.csa_fa_popcount(states))
+    assert apc_total == csa_total == int(np.asarray(states).sum())
+
+
+@given(seed=st.integers(0, 2**16), rows=st.integers(3, 24))
+@settings(max_examples=40, deadline=None)
+def test_csa_compress_preserves_weighted_sum(seed, rows):
+    """One 3:2 pass preserves sum + 2*carry-weight accounting: the paper's
+    lock-step CSA is lossless. We verify on weight-1 rows: sum of inputs ==
+    sum(s) + 2*sum(c) for each compressed group."""
+    bits = _random_bits(seed, (rows, 64))
+    out = popcount.csa_compress(bits)
+    groups = rows // 3
+    for g in range(groups):
+        a, b, c = bits[3 * g], bits[3 * g + 1], bits[3 * g + 2]
+        s, carry = out[2 * g], out[2 * g + 1]
+        lhs = np.asarray(a, np.int32) + np.asarray(b) + np.asarray(c)
+        rhs = np.asarray(s, np.int32) + 2 * np.asarray(carry, np.int32)
+        np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_csa_passes_is_logarithmic():
+    assert popcount.csa_passes(3) == 1
+    assert popcount.csa_passes(2) == 0
+    # ~log_{3/2}: 100 rows compress in ~10 passes, not ~100
+    assert popcount.csa_passes(100) <= 12
+    assert popcount.csa_passes(1000) <= 18
+
+
+def test_apc_is_one_cycle_per_mul():
+    assert popcount.apc_cycles(1) == 1
+    assert popcount.apc_cycles(7) == 7
+
+
+def test_fig6_amortization_converges():
+    """Per-MUL CSA+FA cycles decrease with MAC length and CONVERGE to the
+    constant CSA fold cost: the FA resolve is paid once per MAC (Fig. 6)."""
+    nbit = 1024
+    per = [popcount.csa_fa_cycles_per_mul(n, nbit) for n in (1, 10, 100, 1000)]
+    assert per[0] > per[1] > per[2] > per[3]
+    # converged regime: the asymptote is the per-MUL fold cost
+    fold = popcount.csa_fold_cycles(popcount.rows_per_mul(nbit))
+    assert abs(per[3] - fold) / fold < 0.05
+
+
+def test_csa_fa_cycles_independent_of_row_width():
+    """Lock-step bulk bitwise ops touch all columns at once: two nbit values
+    with the SAME row count cost the same cycles (given equal result width)."""
+    rb = int(np.ceil(np.log2(100 * 256)))
+    assert popcount.rows_per_mul(200) == popcount.rows_per_mul(256) == 1
+    assert popcount.csa_fa_cycles(100, 200, result_bits=rb) == \
+        popcount.csa_fa_cycles(100, 256, result_bits=rb)
+    # more rows (wider operands) cost more folds
+    assert popcount.csa_fold_cycles(16) > popcount.csa_fold_cycles(1)

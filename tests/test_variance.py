@@ -1,0 +1,80 @@
+"""Hardware-variance robustness (§IV-B, Fig. 8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conversion, engine, variance
+
+CFG = engine.EngineConfig(nbit=1024)
+ITERS = 300
+
+
+def _sigma(fn, key, n=ITERS):
+    keys = jax.random.split(key, n)
+    p = jax.vmap(fn)(keys)
+    return float(jnp.std(p)), float(jnp.mean(p))
+
+
+def test_fig8a_ic_variance_does_not_degrade_accuracy(key):
+    """MUL uncertainty is flat in sigma(I_c) up to 10 % (Fig. 8a)."""
+    x, y = 400, 700
+    sig = {}
+    for s_ic in (0.0, 0.05, 0.10):
+        sig[s_ic], _ = _sigma(
+            lambda k: variance.sc_mul_with_ic_variance(k, x, y, CFG, s_ic),
+            jax.random.fold_in(key, int(s_ic * 100)))
+    assert sig[0.10] < 1.5 * sig[0.0]
+    assert sig[0.05] < 1.5 * sig[0.0]
+
+
+def test_fig8b_sc_flat_but_log_multiplier_degrades(key):
+    """Circuit variance: SC+PIM stays flat; the antilog stage of the
+    logarithm multiplier amplifies its input noise (Fig. 8b)."""
+    x, y = 400, 700
+    sc_sig, log_sig = {}, {}
+    for s in (0.04, 0.10):
+        sc_sig[s], _ = _sigma(
+            lambda k: variance.sc_mul_with_circuit_variance(k, x, y, CFG, s),
+            jax.random.fold_in(key, int(s * 1000)))
+        log_sig[s], _ = _sigma(
+            lambda k: variance.log_multiplier(k, x, y, CFG.conv, s),
+            jax.random.fold_in(key, 7000 + int(s * 1000)))
+    # SC grows mildly; log-mult grows sharply and ends far above SC
+    assert sc_sig[0.10] < 2.0 * sc_sig[0.04]
+    assert log_sig[0.10] > 2.0 * log_sig[0.04]
+    assert log_sig[0.10] > 3.0 * sc_sig[0.10]
+
+
+def test_ic_variance_small_spread_keeps_mean_unbiased(key):
+    """At small I_c spread the mean stays on target. (At sigma(I_c) = 10 %
+    the Delta = 60.9 double exponential introduces a Jensen-effect mean
+    shift that the paper's sigma-metric — Fig. 8a, reproduced flat in
+    test_fig8a — does not capture; recorded in DESIGN.md as a model
+    observation, so this test pins BOTH behaviours.)"""
+    x, y = 400, 700
+    p_true = float(conversion.quantized_product_probability(x, y, CFG.conv))
+    _, mean_small = _sigma(
+        lambda k: variance.sc_mul_with_ic_variance(k, x, y, CFG, 0.005), key)
+    assert abs(mean_small - p_true) < 0.01
+    # the documented bias at 10 % static spread (survival pushed toward the
+    # bimodal regime): mean moves AWAY from the target, sigma stays flat
+    _, mean_big = _sigma(
+        lambda k: variance.sc_mul_with_ic_variance(k, x, y, CFG, 0.10),
+        jax.random.fold_in(key, 1))
+    assert mean_big > p_true + 0.05
+
+
+def test_log_multiplier_exact_without_noise(key):
+    x, y = 400, 700
+    p = variance.log_multiplier(key, x, y, CFG.conv, 0.0)
+    expect = (400 / 1024) * (700 / 1024)
+    np.testing.assert_allclose(float(p), expect, rtol=1e-5)
+
+
+def test_mul_uncertainty_metric():
+    p_est = jnp.array([0.1, 0.2, 0.3])
+    assert float(variance.mul_uncertainty(p_est, p_est)) == 0.0
+    s = float(variance.mul_uncertainty(p_est, jnp.array([0.2, 0.2, 0.2])))
+    assert s == pytest.approx(float(jnp.std(p_est - 0.2)))
