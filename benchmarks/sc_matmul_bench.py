@@ -1,8 +1,10 @@
-"""SC-MAC kernel benchmark: the paper's technique as a framework matmul.
+"""SC substrate benchmark: every registered backend through ONE entry point.
 
 Two views:
-  1. CPU-indicative wall-clock of the three modes (exact / moment via the
-     fused Pallas kernel in interpret mode / bitexact core) — relative cost.
+  1. CPU-indicative wall-clock of the registered ``repro.sc`` backends,
+     all dispatched through ``sc_dot`` (exact / moment / pallas_moment on
+     the full shape; the O(M·K·N) bitexact pair on a reduced shape) —
+     relative cost of the interchangeable implementations.
   2. Analytic TPU roofline of the fused kernel vs the unfused 3-matmul
      formulation — the fusion is the beyond-paper optimization, tripling
      arithmetic intensity at equal HBM traffic (§Perf iteration 3).
@@ -14,12 +16,14 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, section, timed
-from repro.core import scmac
-from repro.kernels import ops
+from repro import sc
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 
 M, K, N = 512, 2048, 512
 NBIT = 1024
+
+# backends that materialize every (i, k, j) product run on a reduced shape
+_REDUCED = {"bitexact": (64, 256, 64), "pallas_bitexact": (8, 32, 8)}
 
 
 def analytic_roofline():
@@ -55,28 +59,31 @@ def main(key=None):
     x = jax.random.normal(kx, (M, K), jnp.float32)
     w = jax.random.normal(kw, (K, N), jnp.float32)
 
-    section(f"SC matmul modes, ({M}x{K}) @ ({K}x{N}), nbit={NBIT}")
-    t_exact = timed(lambda: jnp.dot(x, w).block_until_ready())
+    section(f"SC substrate backends via sc_dot, ({M}x{K}) @ ({K}x{N}), "
+            f"nbit={NBIT}")
+    t_exact = timed(
+        lambda: sc.sc_dot(kk, x, w, sc.ScConfig(backend="exact")))
     emit("scmac.us.exact", round(t_exact, 1), "plain XLA matmul (CPU)")
-
-    cfg = scmac.SCMacConfig(mode="moment", nbit=NBIT)
-    t_moment = timed(lambda: scmac.sc_matmul(kk, x, w, cfg))
-    emit("scmac.us.moment_core", round(t_moment, 1),
-         f"{t_moment / t_exact:.1f}x exact (3 dots + draw)")
-
-    t_fused = timed(lambda: ops.sc_matmul_fused(
-        kk, x, w, nbit=NBIT, block_m=128, block_n=128, block_k=512))
-    emit("scmac.us.moment_fused_interpret", round(t_fused, 1),
-         "Pallas interpret mode — correctness path, not perf")
-
-    # bitexact on a reduced shape (O(M*K*N) memory)
-    xs, ws = x[:64, :256], w[:256, :64]
-    cfgb = scmac.SCMacConfig(mode="bitexact", nbit=NBIT)
-    t_bit = timed(lambda: scmac.sc_matmul(kk, xs, ws, cfgb))
-    t_exact_s = timed(lambda: jnp.dot(xs, ws).block_until_ready())
-    emit("scmac.us.bitexact_64x256x64", round(t_bit, 1),
-         f"{t_bit / max(t_exact_s, 1e-9):.0f}x exact — the O(nbit) cost the "
-         "moment mode removes")
+    for backend in sc.available_backends():
+        if backend == "exact":
+            continue
+        if backend in _REDUCED:
+            m, k, n = _REDUCED[backend]
+            xs, ws = x[:m, :k], w[:k, :n]
+            t_ex = timed(lambda: jnp.dot(xs, ws).block_until_ready())
+            cfg = sc.ScConfig(backend=backend, nbit=NBIT)
+            t = timed(lambda: sc.sc_dot(kk, xs, ws, cfg))
+            emit(f"scmac.us.{backend}_{m}x{k}x{n}", round(t, 1),
+                 f"{t / max(t_ex, 1e-9):.0f}x exact — the O(nbit) cost the "
+                 "moment backends remove")
+        else:
+            cfg = sc.ScConfig(backend=backend, nbit=NBIT,
+                              block_m=128, block_n=128, block_k=512)
+            t = timed(lambda: sc.sc_dot(kk, x, w, cfg))
+            note = ("Pallas interpret mode — correctness path, not perf"
+                    if backend.startswith("pallas")
+                    else f"{t / t_exact:.1f}x exact (3 dots + draw)")
+            emit(f"scmac.us.{backend}", round(t, 1), note)
 
     section("Analytic v5e roofline: fused vs unfused SC-MAC")
     analytic_roofline()

@@ -4,15 +4,19 @@ seconds.
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the full Eq. 4 pipeline on two operands, shows the error statistics
-(paper Fig. 7), then lifts the engine to a matmul (the framework feature)
-and shows the Pallas kernel path.
+(paper Fig. 7), then lifts the engine to a matmul through the pluggable
+``repro.sc`` backend registry — including an end-to-end LM forward whose
+every dense() runs the fused Pallas kernel.
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import conversion, engine, scmac
+from repro import sc
+from repro.configs import get_smoke_config
+from repro.core import conversion, engine
 from repro.kernels import ops
+from repro.models import lm, params as params_lib
 
 key = jax.random.PRNGKey(0)
 
@@ -36,24 +40,34 @@ ests = jax.vmap(lambda k: engine.sc_multiply(k, X_INT, Y_INT, cfg)[0])(keys)
 print(f"500 repeats:   mean={float(ests.mean()):.4f} (true {p_true:.4f}), "
       f"sigma={float(ests.std()) * 100:.2f}% — zero-centered Gaussian")
 
-# --- 3. The engine as a framework matmul (NN MAC, paper SIII-C/D) --------
+# --- 3. The engine as a framework matmul: the sc_dot registry ------------
 x = jax.random.normal(key, (8, 256))
 w = jax.random.normal(jax.random.fold_in(key, 1), (256, 16))
-sc_cfg = scmac.SCMacConfig(mode="moment", nbit=1024)
-y_sc = scmac.sc_matmul(key, x, w, sc_cfg)
 y_exact = x @ w
-rel = float(jnp.abs(y_sc - y_exact).mean() / jnp.abs(y_exact).mean())
-print(f"sc_matmul:     mean rel err {rel * 100:.1f}% at nbit=1024")
+print(f"registered backends: {', '.join(sc.available_backends())}")
+for backend in ("moment", "pallas_moment"):
+    sc_cfg = sc.ScConfig(backend=backend, nbit=1024,
+                         block_m=8, block_n=16, block_k=256)
+    y_sc = sc.sc_dot(key, x, w, sc_cfg)
+    rel = float(jnp.abs(y_sc - y_exact).mean() / jnp.abs(y_exact).mean())
+    print(f"sc_dot[{backend:>14s}]: mean rel err {rel * 100:.1f}% at "
+          "nbit=1024")
 
-# --- 4. Pallas kernel path (bit-exact packed engine, interpret mode) -----
+# --- 4. Packed bit-exact Pallas engine on raw probabilities --------------
 est = ops.sc_mul_bitexact(key, jnp.array([X_INT / 1024]),
                           jnp.array([Y_INT / 1024]), nbit=2048)
 print(f"pallas kernel: p_est={float(est[0]):.4f} (true {p_true:.4f})")
 
-# --- 5. Fused moment-matched SC matmul kernel -----------------------------
-y_fused = ops.sc_matmul_fused(key, x, w, nbit=1024, block_m=8,
-                              block_n=16, block_k=256)
-rel_f = float(jnp.abs(y_fused - y_exact).mean() / jnp.abs(y_exact).mean())
-print(f"fused kernel:  mean rel err {rel_f * 100:.1f}% — same statistics, "
-      "one VMEM pass on TPU")
+# --- 5. End-to-end: an LM whose every matmul is the fused Pallas kernel --
+mcfg = get_smoke_config("paper-sc").replace(
+    sc_backend="pallas_moment", param_dtype=jnp.float32,
+    act_dtype=jnp.float32)
+params = params_lib.init_params(key, lm.lm_param_specs(mcfg),
+                                mcfg.param_dtype)
+toks = jax.random.randint(key, (1, 16), 2, mcfg.vocab)
+logits = lm.forward(params, toks, mcfg, rng=jax.random.PRNGKey(7))
+logits_exact = lm.forward(params, toks, mcfg.replace(sc_backend="exact"))
+drift = float(jnp.abs(logits - logits_exact).mean())
+print(f"LM forward:    every dense() via sc_backend={mcfg.sc_backend!r}, "
+      f"logits {tuple(logits.shape)}, mean |Δ| vs exact = {drift:.3f}")
 print("done.")

@@ -1,10 +1,12 @@
 """Serve a small model with batched requests through the continuous-batching
 engine — the inference-side end-to-end driver (the paper's target workload
-is NN inference MACs; sc_mode optionally routes every decode matmul through
-the SC engine).
+is NN inference MACs; --sc routes every prefill/decode matmul through the
+SC substrate registry, any backend).
 
     PYTHONPATH=src python examples/serve_batch.py --requests 12 --slots 4
     PYTHONPATH=src python examples/serve_batch.py --sc            # SC decode
+    PYTHONPATH=src python examples/serve_batch.py --sc \
+        --sc-backend pallas_moment                    # fused Pallas kernel
 """
 
 from __future__ import annotations
@@ -29,15 +31,21 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--sc", action="store_true",
-                    help="route decode matmuls through the SC engine")
+                    help="route decode matmuls through the SC substrate")
+    ap.add_argument("--sc-backend", default=None,
+                    help="any backend registered in repro.sc (implies --sc; "
+                         "default: moment)")
     args = ap.parse_args()
+    if args.sc_backend:
+        args.sc = True
 
     cfg = get_smoke_config(args.arch).replace(
         param_dtype=jnp.float32, act_dtype=jnp.float32,
         # a slightly larger smoke config so serving is non-trivial
         n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=512)
     if args.sc:
-        cfg = cfg.replace(sc_mode="moment", sc_nbit=1024)
+        cfg = cfg.replace(sc_backend=args.sc_backend or "moment",
+                          sc_nbit=1024)
 
     key = jax.random.PRNGKey(0)
     params = params_lib.init_params(key, lm.lm_param_specs(cfg),

@@ -29,12 +29,12 @@ from repro.train import TrainConfig, make_train_step
 from repro.train.step import train_state_init
 
 
-def build_cfg(args, sc_mode: str) -> ModelConfig:
+def build_cfg(args, sc_backend: str) -> ModelConfig:
     return ModelConfig(
-        name=f"sc-lm-{sc_mode}", family="dense", n_layers=args.layers,
+        name=f"sc-lm-{sc_backend}", family="dense", n_layers=args.layers,
         d_model=args.d_model, n_heads=args.d_model // 64 or 2,
         n_kv_heads=max((args.d_model // 64 or 2) // 2, 1),
-        d_ff=args.d_ff, vocab=args.vocab, sc_mode=sc_mode,
+        d_ff=args.d_ff, vocab=args.vocab, sc_backend=sc_backend,
         sc_nbit=args.nbit, attn_impl="full", remat="none",
         param_dtype=jnp.float32, act_dtype=jnp.float32)
 
@@ -47,7 +47,8 @@ def run(cfg: ModelConfig, args, tag: str):
                            global_batch=args.batch, seed=0)
     state = train_state_init(jax.random.PRNGKey(0), cfg, tcfg)
     n_params = sum(v.size for v in jax.tree.leaves(state["params"]))
-    print(f"[{tag}] {n_params / 1e6:.1f}M params, sc_mode={cfg.sc_mode}")
+    print(f"[{tag}] {n_params / 1e6:.1f}M params, "
+          f"sc_backend={cfg.sc_backend}")
     step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
     sup = Supervisor(ckpt_dir=f"{args.ckpt_dir}/{tag}",
                      ckpt_every=args.steps // 4)
@@ -85,9 +86,11 @@ def main():
     ap.add_argument("--nbit", type=int, default=1024)
     ap.add_argument("--ckpt-dir", default="/tmp/sc_lm_ckpt")
     ap.add_argument("--skip-baseline", action="store_true")
+    ap.add_argument("--sc-backend", default="moment",
+                    help="any backend registered in repro.sc")
     args = ap.parse_args()
 
-    f_sc, l_sc = run(build_cfg(args, "moment"), args, "sc")
+    f_sc, l_sc = run(build_cfg(args, args.sc_backend), args, "sc")
     if not args.skip_baseline:
         f_ex, l_ex = run(build_cfg(args, "exact"), args, "exact")
         print(f"\nSC substrate:   {f_sc:.4f} -> {l_sc:.4f}")

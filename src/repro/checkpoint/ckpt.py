@@ -30,7 +30,8 @@ import numpy as np
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    from repro.compat import tree_flatten_with_path
+    flat, treedef = tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         key = "/".join(

@@ -1,0 +1,18 @@
+"""Version-compat helpers for jax API moves (this container pins 0.4.x).
+
+Mesh- and shard_map-shaped shims live next to their single consumers
+(``launch/specs.abstract_mesh``, ``distributed/compression._shard_map``);
+helpers with more than one call site go here.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` landed after 0.4.x; fall back to
+    ``jax.tree_util.tree_flatten_with_path``."""
+    fn = getattr(jax.tree, "flatten_with_path", None) or \
+        jax.tree_util.tree_flatten_with_path
+    return fn(tree, is_leaf=is_leaf)

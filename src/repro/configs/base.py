@@ -41,8 +41,12 @@ class ModelConfig:
     ssm_chunk: int = 256
     # hybrid (zamba2): one SHARED attn+MLP block every `attn_every` ssm layers
     attn_every: int = 0
-    # SC multiplication substrate (the paper's engine as a framework feature)
-    sc_mode: str = "exact"         # exact | moment | bitexact
+    # SC multiplication substrate (the paper's engine as a framework feature):
+    # any backend registered in repro.sc — exact | moment | bitexact |
+    # pallas_moment | pallas_bitexact. ``sc_mode`` is the deprecated alias;
+    # the two fields are kept in sync (see __post_init__ / replace).
+    sc_backend: str = ""
+    sc_mode: str = ""              # DEPRECATED: use sc_backend
     sc_nbit: int = 1024
     # dtypes
     param_dtype: Any = jnp.bfloat16
@@ -51,6 +55,23 @@ class ModelConfig:
     frontend: str = "tokens"
     # remat policy inside the layer scan: none | full
     remat: str = "full"
+
+    def __post_init__(self):
+        # sc_mode -> sc_backend migration: either spelling may be passed at
+        # construction; afterwards both fields hold the resolved backend so
+        # legacy readers of cfg.sc_mode keep working. Two different non-empty
+        # values is a conflict (e.g. raw dataclasses.replace updating only
+        # sc_mode against a mirrored sc_backend) — refuse rather than let
+        # one spelling silently win.
+        if self.sc_backend and self.sc_mode and self.sc_mode != self.sc_backend:
+            raise ValueError(
+                f"conflicting sc_backend={self.sc_backend!r} / "
+                f"sc_mode={self.sc_mode!r}; set one (or use "
+                "ModelConfig.replace, which keeps the alias pair in sync)")
+        if not self.sc_backend:
+            object.__setattr__(self, "sc_backend", self.sc_mode or "exact")
+        if self.sc_mode != self.sc_backend:
+            object.__setattr__(self, "sc_mode", self.sc_backend)
 
     @property
     def resolved_head_dim(self) -> int:
@@ -65,6 +86,12 @@ class ModelConfig:
         return self.d_inner // self.ssm_headdim
 
     def replace(self, **kw) -> "ModelConfig":
+        # keep the sc_backend/sc_mode alias pair in sync: whichever spelling
+        # the caller passes wins over the mirrored stale value of the other
+        if "sc_backend" in kw and "sc_mode" not in kw:
+            kw["sc_mode"] = kw["sc_backend"]
+        elif "sc_mode" in kw and "sc_backend" not in kw:
+            kw["sc_backend"] = kw["sc_mode"]
         return dataclasses.replace(self, **kw)
 
 

@@ -1,154 +1,63 @@
-"""SC-MAC: the paper's MUL engine lifted to a framework-level matmul.
+"""DEPRECATED shim — the SC matmul now lives in :mod:`repro.sc`.
 
-The paper's target workload is the vectored multiply-and-accumulate
-``Σ_i w_i x_i`` in NN inference (§III-C/D). This module exposes
+This module used to carry its own three-mode implementation (exact /
+bitexact / moment) plus a private copy of the operand encoding. Both moved
+into the pluggable backend registry (``repro.sc.backends`` /
+``repro.sc.encoding``); what remains here is a thin compatibility layer so
+existing callers keep working:
 
-    sc_matmul(key, x, w, cfg) -> x @ w   (approximately, via SC)
+    SCMacConfig(mode=..)      -> ScConfig(backend=..)
+    sc_matmul(key, x, w, cfg) -> sc_dot(key, x, w, cfg.to_sc_config())
 
-with three interchangeable modes:
-
-* ``exact``    — plain MXU matmul (the deterministic reference).
-* ``bitexact`` — paper-faithful Monte-Carlo: every scalar product samples a
-                 Binomial(nbit, P_x·P_w) pop-count. Statistically *identical*
-                 to materializing nbit MRAM cells and summing them (the
-                 binomial IS the distribution of the pop-count), without the
-                 O(nbit) memory blow-up. Used for validation and small models.
-* ``moment``   — beyond-paper TPU adaptation: by CLT the signed MAC output is
-                 Normal(mean, var) with
-                   mean = x @ w                         (signed, scaled)
-                   var  = scale²·[(p_x @ p_w) − (p_x² @ p_w²)] / nbit
-                 so three MXU matmuls + one Gaussian draw reproduce the
-                 paper's error statistics at O(1) cost per product instead of
-                 O(nbit). First/second moments match bitexact exactly; the
-                 binomial→normal deviation is < 1 % KS distance at nbit ≥ 256.
-
-Signed operands: the paper treats unsigned operands; we extend by
-sign/magnitude split (the standard SC practice). Magnitudes are encoded as
-probabilities against a per-tensor scale (max-abs), signs multiply through
-the accumulation — this keeps the device physics identical per MUL.
-
-Training: sc_matmul carries a straight-through custom_vjp (backward uses the
-exact product), so SC layers are trainable — the stochastic engine is a
-forward-pass substrate, mirroring how the hardware would run inference while
-training happens elsewhere.
+New code should use ``repro.sc.sc_dot`` directly — it exposes two more
+backends (``pallas_moment``, ``pallas_bitexact``) and is the single
+dispatch point the model stack routes through. The physics derivation
+notes that used to live here are now in ``repro/sc/backends.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
-import jax
-import jax.numpy as jnp
+from repro import sc
+from repro.sc import encoding as _encoding
+
+_LEGACY_MODES = ("exact", "bitexact", "moment")
 
 
 @dataclasses.dataclass(frozen=True)
 class SCMacConfig:
+    """Legacy config; prefer :class:`repro.sc.ScConfig`."""
+
     mode: str = "moment"        # exact | bitexact | moment
     nbit: int = 1024            # stochastic bits per scalar product
     operand_bits: int = 10      # quantization of encoded probabilities (paper: 10)
     quantize: bool = True       # apply the LUT/DTC-grid operand quantization
 
     def __post_init__(self):
-        if self.mode not in ("exact", "bitexact", "moment"):
+        if self.mode not in _LEGACY_MODES:
             raise ValueError(f"unknown SC mode {self.mode!r}")
 
-
-# ---------------------------------------------------------------------------
-# Probability encoding (sign/magnitude, per-tensor max-abs scale)
-# ---------------------------------------------------------------------------
-
-
-def encode(v, cfg: SCMacConfig):
-    """float tensor -> (sign, probability, scale). p ∈ [0,1], v ≈ sign·p·scale."""
-    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30)
-    p = jnp.abs(v) / scale
-    if cfg.quantize:
-        levels = 1 << cfg.operand_bits
-        p = jnp.round(p * levels) / levels   # n-bit operand grid (LUT input)
-    return jnp.sign(v), p, scale
+    def to_sc_config(self) -> sc.ScConfig:
+        return sc.ScConfig(backend=self.mode, nbit=self.nbit,
+                           operand_bits=self.operand_bits,
+                           quantize=self.quantize)
 
 
-# ---------------------------------------------------------------------------
-# Modes
-# ---------------------------------------------------------------------------
+def encode(v, cfg):
+    """float tensor -> (sign, probability, scale). See repro.sc.encoding."""
+    return _encoding.encode(v, cfg)
 
 
-def _matmul_exact(x, w):
-    return jnp.dot(x, w, preferred_element_type=jnp.float32)
-
-
-def _matmul_bitexact(key, x, w, cfg: SCMacConfig):
-    """Binomial pop-count per scalar product, signed sum over K.
-
-    x: (..., K), w: (K, N). Memory O(M·K·N) for the per-product probabilities
-    — validation-scale only, exactly like running the real arrays would be.
-    """
-    sx, px, scx = encode(x, cfg)
-    sw, pw, scw = encode(w, cfg)
-    p_prod = px[..., :, None] * pw[None, ...]        # (..., K, N) = P_x·P_w
-    sign = sx[..., :, None] * sw[None, ...]
-    counts = jax.random.binomial(key, n=float(cfg.nbit), p=p_prod)
-    est = counts.astype(jnp.float32) / cfg.nbit      # ≈ P_x·P_w per product
-    return jnp.sum(sign * est, axis=-2) * (scx * scw)
-
-
-def _matmul_moment(key, x, w, cfg: SCMacConfig):
-    """CLT moment-matched SC matmul: 3 dots + 1 Gaussian draw (beyond-paper)."""
-    sx, px, scx = encode(x, cfg)
-    sw, pw, scw = encode(w, cfg)
-    signed_x = sx * px
-    signed_w = sw * pw
-    mean = _matmul_exact(signed_x, signed_w)
-    # Var of each product estimate = p(1-p)/nbit with p = p_x·p_w;
-    # Σ_k p_k = px@pw, Σ_k p_k² = px²@pw² (p_x,p_w independent across k).
-    sum_p = _matmul_exact(px, pw)
-    sum_p2 = _matmul_exact(px * px, pw * pw)
-    var = jnp.maximum(sum_p - sum_p2, 0.0) / cfg.nbit
-    noise = jax.random.normal(key, mean.shape, dtype=mean.dtype)
-    return (mean + noise * jnp.sqrt(var)) * (scx * scw)
-
-
-# ---------------------------------------------------------------------------
-# Public API with straight-through gradient
-# ---------------------------------------------------------------------------
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(3,))
 def sc_matmul(key, x, w, cfg: SCMacConfig = SCMacConfig()):
-    """x @ w through the SC engine. x: (..., K), w: (K, N)."""
-    return _sc_matmul_fwd_impl(key, x, w, cfg)
+    """x @ w through the SC engine. x: (..., K), w: (K, N).
 
-
-def _sc_matmul_fwd_impl(key, x, w, cfg):
-    if cfg.mode == "exact":
-        return _matmul_exact(x, w)
-    if cfg.mode == "bitexact":
-        return _matmul_bitexact(key, x, w, cfg)
-    return _matmul_moment(key, x, w, cfg)
-
-
-def _sc_matmul_fwd(key, x, w, cfg):
-    return _sc_matmul_fwd_impl(key, x, w, cfg), (x, w)
-
-
-def _sc_matmul_bwd(cfg, res, g):
-    x, w = res
-    # Straight-through: gradients of the exact product. E[SC output] equals
-    # the exact product (Fig. 7a zero-centered error), so this is the
-    # unbiased pathwise choice.
-    gx = jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
-    gw = jnp.dot(
-        x.reshape(-1, x.shape[-1]).T, g.reshape(-1, g.shape[-1]),
-        preferred_element_type=jnp.float32).astype(w.dtype)
-    return None, gx, gw
-
-
-sc_matmul.defvjp(_sc_matmul_fwd, _sc_matmul_bwd)
+    Deprecated alias for ``repro.sc.sc_dot`` (straight-through gradient
+    included — the custom_vjp lives at the registry dispatch boundary).
+    """
+    return sc.sc_dot(key, x, w, cfg.to_sc_config())
 
 
 def sc_einsum_bld_df(key, x, w, cfg: SCMacConfig):
     """Convenience for (batch, len, d) @ (d, f) — the NN layer shape."""
-    b, l, d = x.shape
-    y = sc_matmul(key, x.reshape(b * l, d), w, cfg)
-    return y.reshape(b, l, -1)
+    return sc_matmul(key, x, w, cfg)

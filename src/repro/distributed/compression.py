@@ -75,12 +75,30 @@ def compressed_grads(grad_fn, mesh, *, has_aux: bool = False):
         return loss, grads_c, new_ef
 
     def wrapped(params, batch, ef):
-        return jax.shard_map(
+        return _shard_map(
             pod_local,
             mesh=mesh,
             in_specs=(P(), P("pod"), P("pod")),
             out_specs=(P(), P(), P("pod")),
-            axis_names={"pod"},
+            manual_axes={"pod"},
         )(params, batch, ef)
 
     return wrapped
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
+    """Version-compat shard_map: manual over ``manual_axes`` only.
+
+    jax >= 0.5 spells this ``jax.shard_map(..., axis_names=...)``; 0.4.x
+    spells it ``jax.experimental.shard_map.shard_map(..., auto=<the rest>)``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes))
+    from jax.experimental.shard_map import shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    mapped = shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       auto=auto)
+    # 0.4.x partial-auto shard_map has no eager path — trace it always
+    return jax.jit(mapped)

@@ -1,8 +1,17 @@
-"""Public jit'd wrappers for the SC Pallas kernels.
+"""DEPRECATED shims for the SC Pallas kernels — use :mod:`repro.sc`.
 
-Handles everything the kernels do not: probability encoding, entropy-stream
-generation, padding to block multiples, and un-padding of the results. These
-are the entry points the model stack (models/layers.py) and benchmarks call.
+The encoding / padding / entropy-stream plumbing that used to live here is
+now part of the unified substrate (``repro.sc.encoding`` and the
+``pallas_*`` backends in ``repro.sc.backends``); the model stack reaches
+the kernels through ``repro.sc.sc_dot`` rather than these wrappers.
+
+Kept entry points:
+
+* ``sc_mul_bitexact``  — batched probability-vector MUL (not matmul
+  shaped; still the direct way to exercise the packed engine on raw
+  probabilities, as the quickstart and kernel tests do).
+* ``sc_matmul_fused``  — alias for the ``pallas_moment`` backend.
+* ``to_fx16``          — re-export of the canonical fx16 bias encoding.
 """
 
 from __future__ import annotations
@@ -12,24 +21,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import scmac as scmac_core
-from repro.kernels import sc_mac as sc_mac_kernel
+from repro.sc import ScConfig, encoding
+from repro.sc.backends import pallas_moment
 from repro.kernels import sc_mul as sc_mul_kernel
 
-
-def _pad_to(x, multiple, axis):
-    size = x.shape[axis]
-    rem = (-size) % multiple
-    if rem == 0:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, rem)
-    return jnp.pad(x, pad)
-
-
-def to_fx16(p):
-    """Probability in [0, 1] -> 16-bit fixed-point bias word (clamped)."""
-    return jnp.minimum(jnp.round(p * 65536.0), 65535.0).astype(jnp.uint32)
+to_fx16 = encoding.to_fx16
+_pad_to = encoding.pad_to
 
 
 @functools.partial(jax.jit, static_argnames=("nbit", "block_m", "interpret"))
@@ -62,21 +59,7 @@ def sc_mul_bitexact(key, p_x, p_y, *, nbit: int = 1024, block_m: int = 8,
 def sc_matmul_fused(key, x, w, *, nbit: int = 1024, block_m: int = 128,
                     block_n: int = 128, block_k: int = 512,
                     interpret: bool = True):
-    """Moment-matched SC matmul of float tensors via the fused Pallas kernel.
-
-    x: (M, K), w: (K, N) floats. Encodes to signed probabilities (per-tensor
-    max-abs scale, paper's 10-bit operand grid), runs the fused kernel, and
-    rescales. Drop-in for ``x @ w`` with SC sampling noise.
-    """
-    cfg = scmac_core.SCMacConfig(mode="moment", nbit=nbit)
-    sx, px, scx = scmac_core.encode(x, cfg)
-    sw, pw, scw = scmac_core.encode(w, cfg)
-    xs = _pad_to(sx * px, max(1, min(block_m, x.shape[0])), 0)
-    xs = _pad_to(xs, min(block_k, x.shape[1]), 1)
-    ws = _pad_to(sw * pw, min(block_k, x.shape[1]), 0)
-    ws = _pad_to(ws, max(1, min(block_n, w.shape[1])), 1)
-    noise = jax.random.normal(key, (xs.shape[0], ws.shape[1]), jnp.float32)
-    out = sc_mac_kernel.sc_mac_fused(
-        xs, ws, noise, nbit=nbit, block_m=block_m, block_n=block_n,
-        block_k=block_k, interpret=interpret)
-    return out[: x.shape[0], : w.shape[1]] * (scx * scw)
+    """Deprecated alias: ``sc_dot`` with ``backend="pallas_moment"``."""
+    cfg = ScConfig(backend="pallas_moment", nbit=nbit, block_m=block_m,
+                   block_n=block_n, block_k=block_k, interpret=interpret)
+    return pallas_moment(key, x, w, cfg)

@@ -483,7 +483,8 @@ def _spec_leaves_with_paths(cfg):
     from repro.models import lm as lm_mod
     from repro.models.params import ParamSpec
     specs = lm_mod.lm_param_specs(cfg)
-    flat, _ = jax.tree.flatten_with_path(
+    from repro.compat import tree_flatten_with_path
+    flat, _ = tree_flatten_with_path(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
     return [([str(getattr(p, "key", "")) for p in path], s)
             for path, s in flat]

@@ -41,8 +41,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--sc-backend", default=None,
+                    help="SC substrate backend (any name registered in "
+                         "repro.sc: exact | moment | bitexact | "
+                         "pallas_moment | pallas_bitexact)")
     ap.add_argument("--sc-mode", default=None,
-                    choices=[None, "exact", "moment", "bitexact"])
+                    choices=[None, "exact", "moment", "bitexact"],
+                    help="DEPRECATED alias for --sc-backend")
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -50,8 +55,8 @@ def main(argv=None):
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
     cfg = cfg.replace(param_dtype=jnp.float32, act_dtype=jnp.float32)
-    if args.sc_mode:
-        cfg = cfg.replace(sc_mode=args.sc_mode)
+    if args.sc_backend or args.sc_mode:
+        cfg = cfg.replace(sc_backend=args.sc_backend or args.sc_mode)
 
     mesh = make_local_mesh()
     tcfg = TrainConfig(

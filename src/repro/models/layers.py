@@ -1,8 +1,10 @@
 """Primitive layers: RMSNorm, Linear (SC-routable), SwiGLU MLP, RoPE, embed.
 
 Every matmul in the stack goes through :func:`dense`, which routes to the
-paper's SC engine when ``cfg.sc_mode != "exact"`` — the SC multiplication
-substrate is a first-class framework feature, selectable per model config.
+SC substrate registry when ``cfg.sc_backend != "exact"`` — any registered
+backend (jnp moment/bitexact or the Pallas kernels) is selectable per
+model config, and all of them are trainable through the straight-through
+custom_vjp at the ``sc_dot`` dispatch boundary.
 """
 
 from __future__ import annotations
@@ -10,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import scmac
+from repro import sc
 from repro.models.params import ParamSpec
 
 
@@ -27,14 +29,12 @@ def dense(x, w, cfg, key=None, bias=None):
     x: (..., K); w: (K, N) (or pre-reshaped 2-D view of a fused projection).
     SC modes need a PRNG key; exact mode ignores it.
     """
-    if cfg.sc_mode == "exact" or key is None:
+    if cfg.sc_backend == "exact" or key is None:
         y = jnp.dot(x, w.astype(x.dtype))
     else:
-        sc_cfg = scmac.SCMacConfig(mode=cfg.sc_mode, nbit=cfg.sc_nbit)
-        lead = x.shape[:-1]
-        y = scmac.sc_matmul(key, x.reshape(-1, x.shape[-1]).astype(jnp.float32),
-                            w.astype(jnp.float32), sc_cfg)
-        y = y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+        sc_cfg = sc.ScConfig(backend=cfg.sc_backend, nbit=cfg.sc_nbit)
+        y = sc.sc_dot(key, x.astype(jnp.float32), w.astype(jnp.float32),
+                      sc_cfg).astype(x.dtype)
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y

@@ -1,0 +1,20 @@
+"""repro.sc — the unified SC multiplication substrate.
+
+The paper's thesis is that every memory bit is an SC MUL engine; this
+package is the software analogue: ONE operation interface
+
+    sc_dot(key, x, w, cfg)            # x @ w through the SC engine
+
+with interchangeable array-level implementations behind a registry
+(``exact``, ``moment``, ``bitexact``, ``pallas_moment``,
+``pallas_bitexact``), one canonical operand encoding, and the
+straight-through gradient applied once at the dispatch boundary so every
+backend is trainable. The model stack (models/layers.py:dense), the
+serving engine, the trainer, and the benchmarks all route here.
+"""
+
+from repro.sc.config import ScConfig                      # noqa: F401
+from repro.sc.registry import (                           # noqa: F401
+    available_backends, get_backend, register_backend, sc_dot)
+from repro.sc import backends as _backends                # noqa: F401  (registers)
+from repro.sc import encoding                             # noqa: F401

@@ -1,0 +1,121 @@
+"""The registered SC matmul backends.
+
+Five realizations of the paper's in-memory MUL engine lifted to matmul
+shape, all sharing the canonical encoding in :mod:`repro.sc.encoding` and
+all reached exclusively through :func:`repro.sc.sc_dot`:
+
+* ``exact``           — plain MXU matmul (deterministic reference).
+* ``moment``          — CLT moment-matched jnp path: 3 dots + 1 Gaussian
+                        draw reproduce the engine's error statistics at
+                        O(1) cost per product (see the derivation below).
+* ``bitexact``        — paper-faithful Monte-Carlo: every scalar product
+                        samples a Binomial(nbit, P_x·P_w) pop-count.
+* ``pallas_moment``   — the fused Pallas kernel (kernels/sc_mac.py): the
+                        three moment dots ride one pass over the operand
+                        tiles with VMEM-resident accumulators.
+* ``pallas_bitexact`` — the packed Pallas engine (kernels/sc_mul.py)
+                        lifted to matmul shape: one bank of 32-cell words
+                        per (i, k, j) scalar product, two-pulse AND +
+                        SWAR pop-count, then the signed reduction over K.
+
+Moment derivation (shared by ``moment`` / ``pallas_moment``): by CLT the
+signed MAC output is Normal(mean, var) with
+
+    mean = x @ w                          (signed, scaled)
+    var  = scale²·[(p_x @ p_w) − (p_x² @ p_w²)] / nbit
+
+First/second moments match ``bitexact`` exactly; the binomial→normal
+deviation is < 1 % KS distance at nbit ≥ 256.
+
+Memory classes: ``exact``/``moment``/``pallas_moment`` are O(MN) and run
+at model scale; ``bitexact`` is O(M·K·N) and ``pallas_bitexact`` is
+O(M·K·N·nbit/8) entropy bytes — validation-scale only, exactly like
+running the real cell arrays would be.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sc import encoding
+from repro.sc.config import ScConfig
+from repro.sc.registry import register_backend
+
+
+@register_backend("exact")
+def exact(key, x, w, cfg: ScConfig):
+    del key
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@register_backend("moment")
+def moment(key, x, w, cfg: ScConfig):
+    sx, px, scx = encoding.encode(x, cfg)
+    sw, pw, scw = encoding.encode(w, cfg)
+    mean = jnp.dot(sx * px, sw * pw, preferred_element_type=jnp.float32)
+    # Var of each product estimate = p(1-p)/nbit with p = p_x·p_w;
+    # Σ_k p_k = px@pw, Σ_k p_k² = px²@pw² (p_x,p_w independent across k).
+    sum_p = jnp.dot(px, pw, preferred_element_type=jnp.float32)
+    sum_p2 = jnp.dot(px * px, pw * pw, preferred_element_type=jnp.float32)
+    var = jnp.maximum(sum_p - sum_p2, 0.0) / cfg.nbit
+    noise = jax.random.normal(key, mean.shape, dtype=mean.dtype)
+    return (mean + noise * jnp.sqrt(var)) * (scx * scw)
+
+
+@register_backend("bitexact")
+def bitexact(key, x, w, cfg: ScConfig):
+    sx, px, scx = encoding.encode(x, cfg)
+    sw, pw, scw = encoding.encode(w, cfg)
+    p_prod = px[..., :, None] * pw[None, ...]        # (M, K, N) = P_x·P_w
+    sign = sx[..., :, None] * sw[None, ...]
+    counts = jax.random.binomial(key, n=float(cfg.nbit), p=p_prod)
+    est = counts.astype(jnp.float32) / cfg.nbit      # ≈ P_x·P_w per product
+    return jnp.sum(sign * est, axis=-2) * (scx * scw)
+
+
+@register_backend("pallas_moment")
+def pallas_moment(key, x, w, cfg: ScConfig):
+    from repro.kernels import sc_mac as sc_mac_kernel
+    sx, px, scx = encoding.encode(x, cfg)
+    sw, pw, scw = encoding.encode(w, cfg)
+    xs = encoding.pad_to(sx * px, max(1, min(cfg.block_m, x.shape[0])), 0)
+    xs = encoding.pad_to(xs, min(cfg.block_k, x.shape[1]), 1)
+    ws = encoding.pad_to(sw * pw, min(cfg.block_k, x.shape[1]), 0)
+    ws = encoding.pad_to(ws, max(1, min(cfg.block_n, w.shape[1])), 1)
+    noise = jax.random.normal(key, (xs.shape[0], ws.shape[1]), jnp.float32)
+    out = sc_mac_kernel.sc_mac_fused(
+        xs, ws, noise, nbit=cfg.nbit, block_m=cfg.block_m,
+        block_n=cfg.block_n, block_k=cfg.block_k, interpret=cfg.interpret)
+    return out[: x.shape[0], : w.shape[1]] * (scx * scw)
+
+
+# rows-per-tile of the packed MUL kernel; small because each row already
+# carries NSLICES·(nbit/32) uniform words
+_MUL_BLOCK_M = 8
+
+
+@register_backend("pallas_bitexact")
+def pallas_bitexact(key, x, w, cfg: ScConfig):
+    from repro.kernels import sc_mul as sc_mul_kernel
+    assert cfg.nbit % sc_mul_kernel.LANE_BITS == 0, \
+        "pallas_bitexact needs nbit to be a multiple of 32 (packed words)"
+    nwords = cfg.nbit // sc_mul_kernel.LANE_BITS
+    sx, px, scx = encoding.encode(x, cfg)
+    sw, pw, scw = encoding.encode(w, cfg)
+    m, k = x.shape
+    n = w.shape[1]
+    # one packed MUL (its own bank of nbit cells) per (i, k, j) product
+    px_flat = jnp.broadcast_to(px[:, :, None], (m, k, n)).reshape(-1)
+    pw_flat = jnp.broadcast_to(pw[None, :, :], (m, k, n)).reshape(-1)
+    pxf = encoding.pad_to(encoding.to_fx16(px_flat), _MUL_BLOCK_M, 0)
+    pwf = encoding.pad_to(encoding.to_fx16(pw_flat), _MUL_BLOCK_M, 0)
+    kx, ky = jax.random.split(key)
+    shape = (pxf.shape[0], sc_mul_kernel.NSLICES, nwords)
+    rx = jax.random.bits(kx, shape, jnp.uint32)
+    ry = jax.random.bits(ky, shape, jnp.uint32)
+    counts = sc_mul_kernel.sc_mul_popcount(
+        pxf, pwf, rx, ry, block_m=_MUL_BLOCK_M, interpret=cfg.interpret)
+    est = counts[: m * k * n].astype(jnp.float32).reshape(m, k, n) / cfg.nbit
+    sign = sx[:, :, None] * sw[None, :, :]
+    return jnp.sum(sign * est, axis=1) * (scx * scw)

@@ -1,0 +1,31 @@
+"""Frozen configuration for the SC multiplication substrate.
+
+One ``ScConfig`` fully determines how ``repro.sc.sc_dot`` computes a
+matmul: which registered backend runs it, how many stochastic bits back
+each scalar product, how operands quantize onto the paper's DTC grid, and
+(for the Pallas backends) the kernel tile shape. The dataclass is frozen
+and hashable so it can ride through ``jax.jit`` / ``custom_vjp`` as a
+static argument.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ScConfig:
+    backend: str = "exact"      # name in the repro.sc registry
+    nbit: int = 1024            # stochastic bits per scalar product
+    operand_bits: int = 10      # quantization of encoded probabilities (paper: 10)
+    quantize: bool = True       # apply the LUT/DTC-grid operand quantization
+    # Pallas kernel tiling (moment kernel; clamped to the operand shape)
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 512
+    # interpret=True runs the kernels on CPU (this container); real TPUs
+    # flip it off to compile through Mosaic.
+    interpret: bool = True
+
+    def replace(self, **kw) -> "ScConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,57 @@
+"""Canonical operand encoding shared by every SC backend.
+
+This is the ONE place float tensors become stochastic-computing operands:
+
+* sign/magnitude split — the paper's engine multiplies unsigned
+  probabilities; signs are carried beside the magnitudes and multiply
+  through the accumulation (standard SC practice).
+* per-tensor max-abs scale — magnitudes map onto [0, 1] so every value is
+  a valid Bernoulli bias; the product of the two scales is re-applied to
+  the decoded output.
+* operand-grid quantization — the paper drives pulse durations from an
+  n-bit LUT/DTC (§III-A), so encoded probabilities snap to a 2^n grid.
+* fx16 bias words — the packed Pallas engine consumes biases as 16-bit
+  fixed point (the Horner-ladder resolution in kernels/sc_mul.py).
+
+``core/scmac.py`` and ``kernels/ops.py`` used to each carry a copy of this
+logic; both now delegate here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def encode(v, cfg):
+    """float tensor -> (sign, probability, scale). p ∈ [0,1], v ≈ sign·p·scale.
+
+    ``cfg`` needs ``quantize`` and ``operand_bits`` (ScConfig or the legacy
+    SCMacConfig both qualify).
+    """
+    scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30)
+    p = jnp.abs(v) / scale
+    if cfg.quantize:
+        levels = 1 << cfg.operand_bits
+        p = jnp.round(p * levels) / levels   # n-bit operand grid (LUT input)
+    return jnp.sign(v), p, scale
+
+
+def decode(sign, p, scale):
+    """Inverse of :func:`encode` (up to quantization)."""
+    return sign * p * scale
+
+
+def to_fx16(p):
+    """Probability in [0, 1] -> 16-bit fixed-point bias word (clamped)."""
+    return jnp.minimum(jnp.round(p * 65536.0), 65535.0).astype(jnp.uint32)
+
+
+def pad_to(x, multiple, axis):
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)

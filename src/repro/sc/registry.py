@@ -1,0 +1,86 @@
+"""Backend registry + the single dispatch entry point ``sc_dot``.
+
+Every software realization of the paper's SC MUL engine registers here
+under a name; ``sc_dot(key, x, w, cfg)`` looks the backend up from
+``cfg.backend`` and runs it. The straight-through ``custom_vjp`` lives at
+THIS boundary — not inside any backend — so every registered backend
+(including the Pallas kernels, which have no differentiation rules) is
+trainable for free: the backward pass is the exact-product jacobian, which
+is the unbiased pathwise choice because E[SC output] equals the exact
+product (paper Fig. 7a, zero-centered error).
+
+Adding a backend is a one-file change:
+
+    from repro.sc import register_backend
+
+    @register_backend("my_backend")
+    def my_backend(key, x, w, cfg):   # x: (M, K), w: (K, N) float32
+        ...
+        return y                      # (M, N) float32
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sc.config import ScConfig
+
+_BACKENDS: dict = {}
+
+
+def register_backend(name: str):
+    """Decorator: register ``fn(key, x2d, w, cfg) -> y2d`` under ``name``."""
+    def deco(fn):
+        _BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def get_backend(name: str):
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown SC backend {name!r}; registered: "
+            f"{sorted(_BACKENDS)}") from None
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_BACKENDS))
+
+
+def _dispatch(key, x, w, cfg: ScConfig):
+    fn = get_backend(cfg.backend)
+    lead = x.shape[:-1]
+    y = fn(key, x.reshape(-1, x.shape[-1]), w, cfg)
+    return y.reshape(*lead, w.shape[-1])
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def sc_dot(key, x, w, cfg: ScConfig = ScConfig()):
+    """x @ w through the configured SC backend. x: (..., K), w: (K, N).
+
+    Stochastic backends need a PRNG ``key``; ``exact`` ignores it. The
+    gradient is straight-through (exact-product jacobian) regardless of
+    backend.
+    """
+    return _dispatch(key, x, w, cfg)
+
+
+def _sc_dot_fwd(key, x, w, cfg):
+    return _dispatch(key, x, w, cfg), (x, w)
+
+
+def _sc_dot_bwd(cfg, res, g):
+    x, w = res
+    gx = jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    gw = jnp.dot(
+        x.reshape(-1, x.shape[-1]).T, g.reshape(-1, g.shape[-1]),
+        preferred_element_type=jnp.float32).astype(w.dtype)
+    return None, gx, gw
+
+
+sc_dot.defvjp(_sc_dot_fwd, _sc_dot_bwd)

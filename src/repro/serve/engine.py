@@ -6,7 +6,10 @@ is immediately refilled from the queue — decode never stalls on stragglers
 in the batch (continuous batching). Admission runs prefill for the incoming
 prompt with batch=1 and splices the resulting cache into the slot's batch
 row; decode steps run for all slots at once (the serve_step the dry-run
-lowers). Sampling: greedy or temperature.
+lowers). Sampling is per-slot: each request decodes with its OWN
+temperature (greedy slots stay deterministic), and the engine rng folds
+once per tick. When ``cfg.sc_backend != "exact"`` every prefill/decode
+matmul routes through the SC substrate (repro.sc) with a per-call key.
 """
 
 from __future__ import annotations
@@ -50,9 +53,14 @@ class ServingEngine:
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._rng = jax.random.PRNGKey(scfg.seed)
+        self._stochastic_substrate = cfg.sc_backend != "exact"
         self._decode = jax.jit(partial(lm.decode_step, cfg=cfg))
         self._prefill = jax.jit(
             partial(lm.prefill, cfg=cfg, max_len=scfg.max_len))
+
+    def _next_key(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -73,31 +81,57 @@ class ServingEngine:
             if self.active[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 prompt = jnp.asarray([req.prompt], jnp.int32)
-                logits, cache1, lens = self._prefill(self.params, prompt)
+                if self._stochastic_substrate:
+                    logits, cache1, lens = self._prefill(
+                        self.params, prompt, rng=self._next_key())
+                else:
+                    logits, cache1, lens = self._prefill(self.params, prompt)
                 tok = self._sample(logits, req.temperature)
                 req.generated.append(int(tok[0]))
                 self.active[slot] = req
                 self._splice_slot(slot, cache1, int(lens[0]), int(tok[0]))
 
     def _sample(self, logits, temperature: float):
+        """Sample one admission's tokens (batch=1 prefill logits)."""
         if temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._rng, k = jax.random.split(self._rng)
         return jax.random.categorical(
-            k, logits / temperature, axis=-1).astype(jnp.int32)
+            self._next_key(), logits / temperature, axis=-1).astype(jnp.int32)
+
+    def _sample_slots(self, logits, temperatures):
+        """Per-slot sampling: each slot uses its request's own temperature.
+
+        Greedy slots (t <= 0) take the argmax regardless of the rng, so a
+        greedy request decodes identically whatever its batch neighbours
+        sample.
+        """
+        temps = jnp.asarray(temperatures, jnp.float32)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not any(t > 0.0 for t in temperatures):
+            return greedy
+        safe = jnp.where(temps > 0.0, temps, 1.0)
+        sampled = jax.random.categorical(
+            self._next_key(), logits / safe[:, None], axis=-1).astype(jnp.int32)
+        return jnp.where(temps > 0.0, sampled, greedy)
 
     # ------------------------------------------------------------------
     def step(self):
-        """One engine tick: admit, batched decode, harvest finished."""
+        """One engine tick: admit, batched decode, per-slot sample, harvest."""
         self._admit()
         if not any(r is not None for r in self.active):
             return False
-        logits, self.cache = self._decode(
-            self.params, self.cache, self.last_token, self.lengths)
+        if self._stochastic_substrate:
+            logits, self.cache = self._decode(
+                self.params, self.cache, self.last_token, self.lengths,
+                rng=self._next_key())
+        else:
+            logits, self.cache = self._decode(
+                self.params, self.cache, self.last_token, self.lengths)
         self.lengths = self.lengths + jnp.asarray(
             [1 if r is not None else 0 for r in self.active], jnp.int32)
-        toks = self._sample(logits, max(
-            (r.temperature for r in self.active if r), default=0.0))
+        toks = self._sample_slots(
+            logits, [r.temperature if r is not None else 0.0
+                     for r in self.active])
         self.last_token = toks
         for slot, req in enumerate(self.active):
             if req is None:

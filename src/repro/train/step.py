@@ -146,7 +146,7 @@ def make_train_step(cfg, tcfg: TrainConfig, mesh=None):
         def acc_step(carry, mb):
             loss_acc, g_acc, i = carry
             li, gi = jax.value_and_grad(loss_fn)(
-                params, mb, jax.random.fold_in(rng, i))
+                params, mb, None if rng is None else jax.random.fold_in(rng, i))
             g_acc = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), g_acc, gi)
             return (loss_acc + li, g_acc, i + 1), None
@@ -156,8 +156,10 @@ def make_train_step(cfg, tcfg: TrainConfig, mesh=None):
         return loss / n, jax.tree.map(lambda g: g / n, grads)
 
     def step(state, batch):
-        rng = jax.random.fold_in(jax.random.PRNGKey(tcfg.seed),
-                                 state["opt"]["step"])
+        # The SC substrate (repro.sc) is the only rng consumer in the loss;
+        # exact-backend runs skip the per-layer key folding entirely.
+        rng = None if cfg.sc_backend == "exact" else jax.random.fold_in(
+            jax.random.PRNGKey(tcfg.seed), state["opt"]["step"])
         if tcfg.cross_pod_compress and mesh is not None \
                 and "pod" in mesh.axis_names:
             fn = compression.compressed_grads(

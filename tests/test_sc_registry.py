@@ -1,0 +1,176 @@
+"""The unified SC substrate: registry round-trip, backend equivalence,
+config aliasing, and the dense() -> Pallas end-to-end acceptance path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sc
+from repro.configs import get_smoke_config
+from repro.core import scmac
+from repro.kernels import ops
+from repro.models import layers, lm, params as P
+
+ALL_BACKENDS = ("exact", "moment", "bitexact", "pallas_moment",
+                "pallas_bitexact")
+# small, block-aligned shape every backend (incl. O(M·K·N·nbit) ones) can run
+_CFG = dict(nbit=256, block_m=8, block_n=8, block_k=32)
+
+
+def _xw(key, m=8, k=32, n=8):
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    return x, w
+
+
+def test_all_five_backends_registered():
+    assert set(ALL_BACKENDS) <= set(sc.available_backends())
+
+
+def test_unknown_backend_rejected(key):
+    x, w = _xw(key)
+    with pytest.raises(ValueError, match="unknown SC backend"):
+        sc.sc_dot(key, x, w, sc.ScConfig(backend="bogus"))
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_registry_round_trip(key, backend):
+    """Every backend dispatches through the single sc_dot entry point and
+    produces a finite (M, N) estimate of x @ w."""
+    x, w = _xw(key)
+    y = sc.sc_dot(key, x, w, sc.ScConfig(backend=backend, **_CFG))
+    assert y.shape == (8, 8)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    if backend == "exact":
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend",
+                         ["moment", "bitexact", "pallas_moment",
+                          "pallas_bitexact"])
+def test_backends_agree_with_exact_in_expectation(key, backend):
+    """All stochastic backends estimate x @ w with zero-centered error."""
+    x, w = _xw(key, m=4, k=32, n=4)
+    cfg = sc.ScConfig(backend=backend, **_CFG)
+    n_rep = 48
+    if backend.startswith("pallas"):
+        outs = jnp.stack([sc.sc_dot(k_, x, w, cfg)
+                          for k_ in jax.random.split(key, n_rep)])
+    else:
+        outs = jax.vmap(lambda k_: sc.sc_dot(k_, x, w, cfg))(
+            jax.random.split(key, n_rep))
+    mean = np.asarray(outs.mean(axis=0))
+    exact = np.asarray(x @ w)
+    sigma = np.asarray(outs.std(axis=0))
+    # 5 SE of the mean + operand-quantization bias slack
+    tol = 5 * sigma / np.sqrt(n_rep) + 0.02 * np.abs(exact).max()
+    assert (np.abs(mean - exact) < tol).mean() > 0.9
+
+
+def test_moment_matches_pallas_moment_on_shared_seed(key):
+    """On block-aligned shapes the jnp moment backend and the fused Pallas
+    kernel consume the SAME noise draw per key -> identical outputs to
+    float tolerance (the strongest moment-match statement)."""
+    x, w = _xw(key, m=16, k=64, n=16)
+    core = sc.sc_dot(key, x, w, sc.ScConfig(backend="moment", nbit=256))
+    fused = sc.sc_dot(key, x, w, sc.ScConfig(
+        backend="pallas_moment", nbit=256, block_m=16, block_n=16,
+        block_k=64))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(core),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bitexact_matches_pallas_bitexact_moments(key):
+    """Binomial-draw core and the packed Pallas engine sample the same
+    per-product distribution: first/second moments agree over shared
+    seeds."""
+    x, w = _xw(key, m=4, k=16, n=4)
+    keys = jax.random.split(key, 64)
+    cfg_core = sc.ScConfig(backend="bitexact", nbit=256)
+    cfg_pal = sc.ScConfig(backend="pallas_bitexact", nbit=256)
+    core = jax.vmap(lambda k_: sc.sc_dot(k_, x, w, cfg_core))(keys)
+    pal = jnp.stack([sc.sc_dot(k_, x, w, cfg_pal) for k_ in keys])
+    exact = np.asarray(x @ w)
+    se = np.asarray(core.std(0)) / np.sqrt(64)
+    # both unbiased around the exact product
+    assert (np.abs(np.asarray(core.mean(0)) - exact)
+            < 5 * se + 0.02 * np.abs(exact).max()).mean() > 0.9
+    assert (np.abs(np.asarray(pal.mean(0)) - exact)
+            < 5 * se + 0.02 * np.abs(exact).max()).mean() > 0.9
+    # matching spread
+    ratio = np.asarray(pal.std(0)) / np.maximum(np.asarray(core.std(0)),
+                                                1e-9)
+    assert 0.6 < np.median(ratio) < 1.6
+
+
+@pytest.mark.parametrize("backend", ["moment", "pallas_moment"])
+def test_straight_through_gradients_at_dispatch_boundary(key, backend):
+    """The custom_vjp lives on sc_dot, so even the Pallas kernels (which
+    have no differentiation rules) train with the exact-product
+    jacobian."""
+    x, w = _xw(key)
+    cfg = sc.ScConfig(backend=backend, **_CFG)
+
+    def loss(x_, w_):
+        return jnp.sum(sc.sc_dot(key, x_, w_, cfg) ** 2)
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    y = sc.sc_dot(key, x, w, cfg)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(2 * (y @ w.T)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(2 * (x.T @ y)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_legacy_shims_route_through_registry(key):
+    """core.scmac and kernels.ops entry points are aliases of sc_dot —
+    identical draws per key."""
+    x, w = _xw(key, m=16, k=64, n=16)
+    legacy = scmac.sc_matmul(key, x, w,
+                             scmac.SCMacConfig(mode="moment", nbit=256))
+    new = sc.sc_dot(key, x, w, sc.ScConfig(backend="moment", nbit=256))
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
+    legacy_f = ops.sc_matmul_fused(key, x, w, nbit=256, block_m=16,
+                                   block_n=16, block_k=64)
+    new_f = sc.sc_dot(key, x, w, sc.ScConfig(
+        backend="pallas_moment", nbit=256, block_m=16, block_n=16,
+        block_k=64))
+    np.testing.assert_allclose(np.asarray(legacy_f), np.asarray(new_f),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_model_config_backend_aliasing():
+    cfg = get_smoke_config("paper-sc")
+    assert cfg.sc_backend == "moment" and cfg.sc_mode == "moment"
+    up = cfg.replace(sc_backend="pallas_moment")
+    assert up.sc_mode == "pallas_moment"
+    legacy = up.replace(sc_mode="exact")
+    assert legacy.sc_backend == "exact"
+
+
+def test_dense_reaches_pallas_kernel_end_to_end(key):
+    """Acceptance: dense() reaches the fused Pallas kernel via
+    ScConfig(backend="pallas_moment") — both at the layer level and
+    through a full LM forward."""
+    cfg = get_smoke_config("paper-sc").replace(
+        sc_backend="pallas_moment", param_dtype=jnp.float32,
+        act_dtype=jnp.float32)
+    # layer level
+    x = jax.random.normal(key, (2, 8, 64), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 32), jnp.float32)
+    y = layers.dense(x, w, cfg, key=key)
+    assert y.shape == (2, 8, 32)
+    exact = layers.dense(x, w, cfg.replace(sc_backend="exact"))
+    err = float(jnp.abs(y - exact).mean())
+    assert 0.0 < err < 0.2 * float(jnp.abs(exact).max())
+    # full model: stochastic forward, close to exact logits
+    params = P.init_params(key, lm.lm_param_specs(cfg), jnp.float32)
+    toks = jax.random.randint(key, (1, 16), 2, cfg.vocab)
+    l1 = lm.forward(params, toks, cfg, rng=jax.random.PRNGKey(1))
+    l2 = lm.forward(params, toks, cfg, rng=jax.random.PRNGKey(2))
+    assert float(jnp.abs(l1 - l2).max()) > 0     # stochastic substrate
+    e1 = lm.forward(params, toks, cfg.replace(sc_backend="exact"))
+    assert float(jnp.abs(l1 - e1).mean()) < 1.0  # moment-matched noise
