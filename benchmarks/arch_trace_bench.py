@@ -1,0 +1,135 @@
+"""Array-architecture trace benchmark: the paper's §V headlines from a
+COMMAND TRACE instead of the closed-form model, then real workloads.
+
+  1. One 10-bit MUL is tiled onto the array, compiled to its pulse
+     schedule, and priced by the accountant — the ≈4× (vs conventional SC)
+     and ≈18× (vs Boolean-PIM) cycle ratios must re-emerge from the trace
+     makespan (they are asserted, not just printed).
+  2. A real LM forward pass (paper-sc) replays with ``sc_backend="array"``:
+     every dense() dispatch records its schedule; the per-call table shows
+     where the cycles/energy go. Records are per COMPILED call (the layer
+     scan body traces once), so the static workload pricing below carries
+     the exact layer multiplicity.
+  3. The same config's full dense() workload is priced statically
+     (repro.arch.workload) — per-site cycles, energy, utilization — and,
+     outside ``--tiny``, a production config (qwen3-14b at decode batch)
+     shows the simulator holding up at scale.
+
+Writes ``BENCH_arch_trace.json`` (headline ratios + workload totals) for
+the CI artifact trail.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, section, write_json
+from repro import arch, sc
+from repro.configs import get_config, get_smoke_config
+from repro.core import costmodel as cm
+from repro.models import lm, params as params_lib
+
+NBIT = 1024          # 2^10 stochastic bits = the paper's 10-bit operands
+N_BITS = 10
+
+
+def headline_from_trace() -> dict:
+    """§V Fig. 9 ratios derived from the compiled command trace."""
+    section("1. One 10-bit MUL: pulse schedule -> cycles -> §V ratios")
+    rec = arch.schedule_call(1, 1, 1, NBIT)
+    print(arch.format_trace(rec.trace))
+    trace_cycles = rec.report.cycles
+    sc_cycles = cm.cycles_sc(N_BITS)
+    pim_anchor = cm.cycles_pim(8)          # the paper's published DRISA anchor
+    vs_sc = sc_cycles / trace_cycles
+    vs_pim = pim_anchor / trace_cycles
+    emit("arch.trace.cycles_per_mul", trace_cycles,
+         f"closed-form {cm.cycles_scpim_apc(N_BITS):.0f}")
+    emit("arch.trace.energy_pj_per_mul", round(rec.report.energy_pj, 2),
+         f"closed-form {cm.energy_scpim(N_BITS, 'apc')[0]:.2f}")
+    emit("arch.trace.speedup_vs_sc", round(vs_sc, 2), "paper: ~4x")
+    emit("arch.trace.speedup_vs_pim", round(vs_pim, 2), "paper: 18x")
+    assert trace_cycles == cm.cycles_scpim_apc(N_BITS), \
+        "trace makespan drifted from the closed-form §V model"
+    assert 3.0 <= vs_sc <= 5.0, f"vs-SC ratio {vs_sc:.2f} outside Fig. 9a"
+    assert 15.0 <= vs_pim <= 21.0, f"vs-PIM ratio {vs_pim:.2f} outside Fig. 9a"
+    return {"cycles_per_mul": trace_cycles,
+            "energy_pj_per_mul": round(rec.report.energy_pj, 3),
+            "speedup_vs_sc": round(vs_sc, 3),
+            "speedup_vs_pim": round(vs_pim, 3)}
+
+
+def replay_forward(tokens: int = 8) -> dict:
+    """Run a real LM forward on the array backend and read the trace."""
+    section(f"2. LM forward replay on the array backend ({tokens} tokens)")
+    key = jax.random.PRNGKey(0)
+    cfg = get_smoke_config("paper-sc").replace(
+        sc_backend="array", sc_nbit=NBIT,
+        param_dtype=jnp.float32, act_dtype=jnp.float32)
+    params = params_lib.init_params(key, lm.lm_param_specs(cfg),
+                                    cfg.param_dtype)
+    toks = jax.random.randint(key, (1, tokens), 2, cfg.vocab)
+    with arch.collect() as records:
+        logits = lm.forward(params, toks, cfg, rng=jax.random.PRNGKey(7))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    print(f"{'shape':<16s} {'products':>9s} {'waves':>6s} {'cycles':>7s} "
+          f"{'energy_nJ':>10s} {'util':>5s}")
+    for r in records:
+        m, k, n = r.shape
+        print(f"{f'{m}x{k}x{n}':<16s} {r.plan.products:>9,d} "
+              f"{r.plan.waves:>6d} {r.report.cycles:>7,d} "
+              f"{r.report.energy_nj:>10.1f} {r.report.subarray_util:>5.2f}")
+    agg = arch.merge_reports(r.report for r in records)
+    emit("arch.replay.calls", len(records),
+         "per COMPILED dense() site (scan body traces once)")
+    emit("arch.replay.cycles", agg.cycles, "sum over compiled sites")
+    emit("arch.replay.energy_nj", round(agg.energy_nj, 1), "")
+    return {"calls": len(records), "cycles": agg.cycles,
+            "energy_pj": round(agg.energy_pj, 1)}
+
+
+def price_model(arch_id: str, tokens: int, smoke: bool = False,
+                top: int = 8) -> dict:
+    """Static full-multiplicity pricing of one config's dense() workload."""
+    cfg = (get_smoke_config if smoke else get_config)(arch_id)
+    sites = arch.dense_workload(cfg, tokens)
+    per_site, total = arch.price_workload(sites, NBIT)
+    tag = f"{arch_id}{'(smoke)' if smoke else ''}"
+    section(f"3. Full workload pricing: {tag}, {tokens} tokens, nbit={NBIT}")
+    per_site.sort(key=lambda sr: -sr[1].cycles)
+    for s, r in per_site[:top]:
+        print(f"  {s.label:<12s} {s.m}x{s.k}x{s.n} x{s.count:<3d} "
+              f"{r.cycles:>13,d} cyc  {r.energy_pj / 1e6:>9.2f} µJ  "
+              f"util={r.subarray_util:.2f}")
+    print(f"  {'TOTAL':<12s} {total.products:,} MULs  "
+          f"{total.cycles:>13,d} cyc  {total.energy_pj / 1e6:>9.2f} µJ")
+    emit(f"arch.workload.{tag}.cycles", total.cycles, f"{tokens} tokens")
+    emit(f"arch.workload.{tag}.energy_uj", round(total.energy_pj / 1e6, 2), "")
+    emit(f"arch.workload.{tag}.cycles_per_mul",
+         round(total.cycles_per_product, 3),
+         "amortized (waves pipeline MULs)")
+    return {"tokens": tokens, "products": total.products,
+            "cycles": total.cycles,
+            "energy_pj": round(total.energy_pj, 1),
+            "cycles_per_mul": round(total.cycles_per_product, 4)}
+
+
+def main(tiny: bool = False):
+    payload = {"nbit": NBIT, "tiny": tiny,
+               "headline": headline_from_trace(),
+               "replay": replay_forward(tokens=8),
+               "workloads": {}}
+    payload["workloads"]["paper-sc(smoke)"] = price_model(
+        "paper-sc", tokens=8, smoke=True)
+    if not tiny:
+        payload["workloads"]["paper-sc"] = price_model("paper-sc", tokens=128)
+        payload["workloads"]["qwen3-14b@decode128"] = price_model(
+            "qwen3-14b", tokens=128)
+    write_json("BENCH_arch_trace.json", payload)
+
+
+if __name__ == "__main__":
+    main(tiny="--tiny" in sys.argv)

@@ -1,7 +1,8 @@
-"""Shared benchmark utilities: timing, CSV emit, tiny ASCII plots."""
+"""Shared benchmark utilities: timing, CSV emit, JSON artifacts, ASCII plots."""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -33,3 +34,12 @@ def bar(label: str, value: float, vmax: float, width: int = 40,
 
 def section(title: str):
     print(f"\n=== {title} " + "=" * max(8, 68 - len(title)))
+
+
+def write_json(path: str, payload: dict):
+    """Machine-readable benchmark artifact (BENCH_*.json at the CWD; CI
+    uploads these so the perf trajectory is diffable across commits)."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[wrote {path}]")

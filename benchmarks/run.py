@@ -10,8 +10,9 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig7_accuracy, fig8_variance, fig9_cycles,
-                        fig10_energy, fig11_area, roofline, sc_matmul_bench)
+from benchmarks import (arch_trace_bench, fig7_accuracy, fig8_variance,
+                        fig9_cycles, fig10_energy, fig11_area, roofline,
+                        sc_matmul_bench)
 
 SUITES = {
     "fig7": fig7_accuracy.main,     # accuracy statistics (paper Fig. 7)
@@ -20,6 +21,7 @@ SUITES = {
     "fig10": fig10_energy.main,     # energy (paper Fig. 10)
     "fig11": fig11_area.main,       # area (paper Fig. 11)
     "scmac": sc_matmul_bench.main,  # the SC-MAC framework matmul + roofline
+    "arch": arch_trace_bench.main,  # array simulator: §V ratios from traces
     "roofline": roofline.main,      # 40-cell dry-run roofline table
 }
 

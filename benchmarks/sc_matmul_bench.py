@@ -1,29 +1,43 @@
 """SC substrate benchmark: every registered backend through ONE entry point.
 
-Two views:
+Three views:
   1. CPU-indicative wall-clock of the registered ``repro.sc`` backends,
      all dispatched through ``sc_dot`` (exact / moment / pallas_moment on
-     the full shape; the O(M·K·N) bitexact pair on a reduced shape) —
+     the full shape; the O(M·K·N) bitexact family on a reduced shape) —
      relative cost of the interchangeable implementations.
-  2. Analytic TPU roofline of the fused kernel vs the unfused 3-matmul
+  2. Modeled SOT-MRAM array cycles for each measured (backend, shape) from
+     the repro.arch pulse-schedule compiler — what the same call costs on
+     the paper's hardware, next to what it costs this host.
+  3. Analytic TPU roofline of the fused kernel vs the unfused 3-matmul
      formulation — the fusion is the beyond-paper optimization, tripling
      arithmetic intensity at equal HBM traffic (§Perf iteration 3).
+
+Writes ``BENCH_sc_matmul.json``: backend × shape → wall-time µs + modeled
+array cycles (the machine-readable perf trajectory CI archives).
+``--tiny`` shrinks shapes for smoke/CI runs.
 """
 
 from __future__ import annotations
 
+import sys
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, section, timed
-from repro import sc
+from benchmarks.common import emit, section, timed, write_json
+from repro import arch, sc
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 
 M, K, N = 512, 2048, 512
 NBIT = 1024
 
 # backends that materialize every (i, k, j) product run on a reduced shape
-_REDUCED = {"bitexact": (64, 256, 64), "pallas_bitexact": (8, 32, 8)}
+_REDUCED = {"bitexact": (64, 256, 64), "pallas_bitexact": (8, 32, 8),
+            "array": (64, 256, 64)}
+
+_TINY = dict(full=(32, 128, 32), reduced={"bitexact": (8, 32, 8),
+                                          "pallas_bitexact": (4, 16, 4),
+                                          "array": (8, 32, 8)})
 
 
 def analytic_roofline():
@@ -38,6 +52,7 @@ def analytic_roofline():
         # in-kernel PRNG epilogue: the (M, N) noise input disappears
         "it2_fused_prng": 4 * (M * K + K * N + M * N),
     }
+    out = {}
     for name, b in variants.items():
         compute_s = flops / PEAK_FLOPS_BF16
         memory_s = b / HBM_BW
@@ -45,37 +60,59 @@ def analytic_roofline():
         bound = "compute" if compute_s > memory_s else "memory"
         emit(f"scmac.roofline.{name}.arith_intensity", round(ai, 1),
              f"bound={bound} mem_s={memory_s:.2e} comp_s={compute_s:.2e}")
+        out[name] = {"arith_intensity": round(ai, 1), "bound": bound}
     emit("scmac.roofline.fusion_traffic_saving",
          round(variants["it0_unfused"] / variants["it1_fused"], 2),
          "fused kernel HBM-traffic advantage")
     emit("scmac.roofline.prng_traffic_saving",
          round(variants["it1_fused"] / variants["it2_fused_prng"], 2),
          "in-kernel PRNG advantage on top of fusion")
+    return out
 
 
-def main(key=None):
+def _array_cycles(m: int, k: int, n: int, nbit: int) -> int:
+    """Modeled SOT-MRAM cycles for the call (repro.arch schedule makespan)."""
+    return arch.schedule_call(m, k, n, nbit).report.cycles
+
+
+def main(key=None, tiny: bool = False):
     key = key if key is not None else jax.random.PRNGKey(3)
+    full = _TINY["full"] if tiny else (M, K, N)
+    reduced = _TINY["reduced"] if tiny else _REDUCED
+    m0, k0, n0 = full
     kx, kw, kk = jax.random.split(key, 3)
-    x = jax.random.normal(kx, (M, K), jnp.float32)
-    w = jax.random.normal(kw, (K, N), jnp.float32)
+    x = jax.random.normal(kx, (m0, k0), jnp.float32)
+    w = jax.random.normal(kw, (k0, n0), jnp.float32)
 
-    section(f"SC substrate backends via sc_dot, ({M}x{K}) @ ({K}x{N}), "
+    results: dict = {}
+
+    def put(backend, m, k, n, wall_us, note):
+        results[backend] = {
+            "shape": [m, k, n], "nbit": NBIT,
+            "wall_us": round(wall_us, 1),
+            "array_cycles": _array_cycles(m, k, n, NBIT),
+            "note": note,
+        }
+
+    section(f"SC substrate backends via sc_dot, ({m0}x{k0}) @ ({k0}x{n0}), "
             f"nbit={NBIT}")
     t_exact = timed(
         lambda: sc.sc_dot(kk, x, w, sc.ScConfig(backend="exact")))
     emit("scmac.us.exact", round(t_exact, 1), "plain XLA matmul (CPU)")
+    put("exact", m0, k0, n0, t_exact, "plain XLA matmul (CPU)")
     for backend in sc.available_backends():
         if backend == "exact":
             continue
-        if backend in _REDUCED:
-            m, k, n = _REDUCED[backend]
+        if backend in reduced:
+            m, k, n = reduced[backend]
             xs, ws = x[:m, :k], w[:k, :n]
             t_ex = timed(lambda: jnp.dot(xs, ws).block_until_ready())
             cfg = sc.ScConfig(backend=backend, nbit=NBIT)
             t = timed(lambda: sc.sc_dot(kk, xs, ws, cfg))
-            emit(f"scmac.us.{backend}_{m}x{k}x{n}", round(t, 1),
-                 f"{t / max(t_ex, 1e-9):.0f}x exact — the O(nbit) cost the "
-                 "moment backends remove")
+            note = (f"{t / max(t_ex, 1e-9):.0f}x exact — the O(nbit) cost "
+                    "the moment backends remove")
+            emit(f"scmac.us.{backend}_{m}x{k}x{n}", round(t, 1), note)
+            put(backend, m, k, n, t, note)
         else:
             cfg = sc.ScConfig(backend=backend, nbit=NBIT,
                               block_m=128, block_n=128, block_k=512)
@@ -84,10 +121,15 @@ def main(key=None):
                     if backend.startswith("pallas")
                     else f"{t / t_exact:.1f}x exact (3 dots + draw)")
             emit(f"scmac.us.{backend}", round(t, 1), note)
+            put(backend, m0, k0, n0, t, note)
 
     section("Analytic v5e roofline: fused vs unfused SC-MAC")
-    analytic_roofline()
+    roofline = analytic_roofline()
+
+    write_json("BENCH_sc_matmul.json",
+               {"tiny": tiny, "nbit": NBIT, "backends": results,
+                "roofline": roofline})
 
 
 if __name__ == "__main__":
-    main()
+    main(tiny="--tiny" in sys.argv)

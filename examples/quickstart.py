@@ -12,7 +12,7 @@ every dense() runs the fused Pallas kernel.
 import jax
 import jax.numpy as jnp
 
-from repro import sc
+from repro import arch, sc
 from repro.configs import get_smoke_config
 from repro.core import conversion, engine
 from repro.kernels import ops
@@ -70,4 +70,19 @@ logits_exact = lm.forward(params, toks, mcfg.replace(sc_backend="exact"))
 drift = float(jnp.abs(logits - logits_exact).mean())
 print(f"LM forward:    every dense() via sc_backend={mcfg.sc_backend!r}, "
       f"logits {tuple(logits.shape)}, mean |Δ| vs exact = {drift:.3f}")
+
+# --- 6. The array-level architecture simulator (repro.arch) ---------------
+# The same matmul "on hardware": tiled onto banks/subarrays, compiled to a
+# pulse schedule, priced in cycles and picojoules — while the numerics run
+# the bit-exact engine underneath.
+xa = jax.random.normal(key, (4, 32))
+wa = jax.random.normal(jax.random.fold_in(key, 2), (32, 8))
+with arch.collect() as records:
+    ya = sc.sc_dot(key, xa, wa, sc.ScConfig(backend="array", nbit=1024))
+rec = records[0]
+rep = rec.report
+print(f"array backend: {rec.plan.products} MULs -> {rec.plan.waves} wave(s) "
+      f"on {rec.plan.spec.banks} banks, {rep.cycles} cycles, "
+      f"{rep.energy_nj:.1f} nJ, subarray util {rep.subarray_util:.2f}")
+print(arch.format_trace(rec.trace))
 print("done.")

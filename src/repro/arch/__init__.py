@@ -1,0 +1,38 @@
+"""repro.arch — array-level simulator of the SOT-MRAM SC engine.
+
+The paper's headline numbers come from an *architecture* (§III-D, §V):
+256-cell cross-point rows grouped into subarrays and banks with
+row-parallel preset/pulse/read sequencing. This package makes that
+architecture executable:
+
+    spec.py        ArraySpec — chip → bank → subarray → 256-cell rows
+    tiler.py       decompose sc_dot(x, w) into row-sized tiles / waves
+    schedule.py    compile tiles to a PRESET/PULSE/READ/POPCOUNT/MERGE trace
+    accounting.py  walk the trace with core.costmodel.CostParams →
+                   cycles / energy / utilization
+    trace.py       collectors recording every array-backend dispatch
+    backend.py     the registered ``array`` SC backend + ambient spec/params
+    workload.py    static per-layer matmul extraction for production shapes
+
+Usage — run any model "on hardware" and read the bill:
+
+    from repro import arch, sc
+    with arch.collect() as records:
+        y = sc.sc_dot(key, x, w, sc.ScConfig(backend="array", nbit=1024))
+    print(arch.format_trace(records[0].trace))
+    print(arch.report_dict(records[0].report))
+"""
+
+from repro.arch.spec import ArraySpec, DEFAULT_SPEC                # noqa: F401
+from repro.arch.tiler import (                                     # noqa: F401
+    Tile, TilePlan, iter_tiles, occupancy, plan_summary, tile_matmul)
+from repro.arch.schedule import (                                  # noqa: F401
+    OPS, Command, compile_schedule, format_trace, makespan)
+from repro.arch.accounting import (                                # noqa: F401
+    TraceReport, account, merge_reports, report_dict)
+from repro.arch.trace import (                                     # noqa: F401
+    CallRecord, TraceCollector, collect, scaled, summarize)
+from repro.arch.backend import (                                   # noqa: F401
+    current_params, current_spec, schedule_call, use_params, use_spec)
+from repro.arch.workload import (                                  # noqa: F401
+    MatmulSite, dense_workload, price_workload)

@@ -1,0 +1,113 @@
+"""The ``array`` SC backend: run sc_dot "on the hardware".
+
+Registered in the :mod:`repro.sc` registry (lazily — importing this module
+is what registers it), so ``ScConfig(backend="array")`` turns every
+``dense()`` in the model stack and every serve-engine prefill/decode matmul
+into an array-level execution: the call is tiled onto the active
+:class:`~repro.arch.spec.ArraySpec`, compiled to a pulse schedule, priced
+by the accountant, and recorded to any active trace collector — all at
+JAX trace time (the schedule depends only on shapes).
+
+Numerics reuse the registered bit-exact engines per size class, so the
+returned values ARE the stochastic estimates the cell array would produce:
+
+* tiny calls (≤ ``_PALLAS_CELL_CAP`` cells, nbit % 32 == 0) run the packed
+  Pallas engine — real two-pulse AND + SWAR pop-count per cell word;
+* validation-scale calls (≤ ``_BITEXACT_PRODUCT_CAP`` products) run the
+  binomial ``bitexact`` backend — one Binomial(nbit, P_x·P_y) pop-count
+  per product, the paper's Monte-Carlo;
+* larger calls fall back to the CLT ``moment`` backend, whose first two
+  moments equal the bitexact ensemble's — the only tractable stand-in at
+  model scale (the trace still prices the full array execution).
+
+The active ArraySpec / CostParams are ambient (``use_spec`` /
+``use_params``) rather than ScConfig fields, so model code selecting the
+backend by name needs no plumbing changes to re-target hardware geometry.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro.arch import accounting, trace
+from repro.arch.schedule import compile_schedule
+from repro.arch.spec import ArraySpec, DEFAULT_SPEC
+from repro.arch.tiler import tile_matmul
+from repro.core.costmodel import CostParams, DEFAULT_PARAMS
+from repro.sc import backends as sc_backends
+from repro.sc.config import ScConfig
+from repro.sc.registry import register_backend
+
+# Numerics size classes (cells = products × nbit).
+_PALLAS_CELL_CAP = 1 << 16          # packed Pallas engine (O(cells/8) bytes)
+_BITEXACT_PRODUCT_CAP = 1 << 21     # jnp binomial engine (O(products) floats)
+
+_SPEC_STACK: list[ArraySpec] = [DEFAULT_SPEC]
+_PARAMS_STACK: list[CostParams] = [DEFAULT_PARAMS]
+
+
+def current_spec() -> ArraySpec:
+    return _SPEC_STACK[-1]
+
+
+def current_params() -> CostParams:
+    return _PARAMS_STACK[-1]
+
+
+@contextlib.contextmanager
+def use_spec(spec: ArraySpec):
+    """Scope the array geometry the ``array`` backend schedules onto."""
+    _SPEC_STACK.append(spec)
+    try:
+        yield spec
+    finally:
+        _SPEC_STACK.pop()
+
+
+@contextlib.contextmanager
+def use_params(params: CostParams):
+    """Scope the cost knobs the accountant prices traces with."""
+    _PARAMS_STACK.append(params)
+    try:
+        yield params
+    finally:
+        _PARAMS_STACK.pop()
+
+
+def schedule_call(m: int, k: int, n: int, nbit: int,
+                  spec: ArraySpec | None = None,
+                  params: CostParams | None = None) -> trace.CallRecord:
+    """Tile + compile + price one (m, k) @ (k, n) call — the pure-Python
+    core the backend runs at trace time, also usable standalone (static
+    workload analyses, benchmarks)."""
+    spec = spec if spec is not None else current_spec()
+    params = params if params is not None else current_params()
+    plan = tile_matmul(m, k, n, nbit, spec)
+    cmds = compile_schedule(plan, params)
+    report = accounting.account(cmds, spec, params)
+    return trace.CallRecord(plan=plan, trace=cmds, report=report)
+
+
+def _numerics(key, x, w, cfg: ScConfig):
+    products = x.shape[0] * x.shape[1] * w.shape[1]
+    cells = products * cfg.nbit
+    if cfg.nbit % 32 == 0 and cells <= _PALLAS_CELL_CAP:
+        return sc_backends.pallas_bitexact(key, x, w, cfg)
+    if products <= _BITEXACT_PRODUCT_CAP:
+        return sc_backends.bitexact(key, x, w, cfg)
+    return sc_backends.moment(key, x, w, cfg)
+
+
+@register_backend("array")
+def array(key, x, w, cfg: ScConfig):
+    """Array-level execution: schedule + account (trace time), then the
+    size-matched bit-exact numerics."""
+    if trace.active():
+        rec = schedule_call(x.shape[0], x.shape[1], w.shape[1], cfg.nbit)
+        trace.record(rec)
+    else:
+        # Still validate the mapping (a call that cannot be scheduled on the
+        # active spec should fail loudly even when nobody is tracing).
+        tile_matmul(x.shape[0], x.shape[1], w.shape[1], cfg.nbit,
+                    current_spec())
+    return _numerics(key, x, w, cfg)

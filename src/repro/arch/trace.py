@@ -1,0 +1,115 @@
+"""Trace collection: record what the ``array`` backend compiled, per call.
+
+The backend's tiler/scheduler/accountant run in ordinary Python while JAX
+traces the surrounding computation — the schedule depends only on operand
+SHAPES, never values — so recording happens at *trace time*: under ``jit``
+each compiled shape contributes exactly ONE record however many times the
+executable later runs (a ``jax.lax.scan`` over layers likewise records its
+body once). Callers that replay a record R times scale with
+``scaled(record, R)``.
+
+Two ways to listen:
+
+    with arch.collect() as records:          # scoped (benchmarks, tests)
+        y = sc.sc_dot(key, x, w, cfg)
+
+    collector = arch.TraceCollector()        # long-lived (serve engine)
+    collector.install()
+    ...                                      # jit compilations record here
+    collector.uninstall()
+
+Multiple listeners may be active; every record goes to all of them.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from repro.arch import accounting
+from repro.arch.schedule import Command
+from repro.arch.spec import ArraySpec
+from repro.arch.tiler import TilePlan, plan_summary
+
+
+@dataclasses.dataclass(frozen=True)
+class CallRecord:
+    """One compiled ``sc_dot`` call on the array: plan + trace + price."""
+
+    plan: TilePlan
+    trace: tuple[Command, ...]
+    report: accounting.TraceReport
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (self.plan.m, self.plan.k, self.plan.n)
+
+    def as_dict(self) -> dict:
+        return {"plan": plan_summary(self.plan),
+                "report": accounting.report_dict(self.report)}
+
+
+class TraceCollector:
+    """Accumulates CallRecords from every array-backend dispatch in scope."""
+
+    def __init__(self):
+        self.records: list[CallRecord] = []
+
+    def install(self) -> "TraceCollector":
+        if self not in _LISTENERS:
+            _LISTENERS.append(self)
+        return self
+
+    def uninstall(self) -> None:
+        if self in _LISTENERS:
+            _LISTENERS.remove(self)
+
+    def clear(self) -> None:
+        self.records.clear()
+
+    def aggregate(self) -> accounting.TraceReport:
+        return accounting.merge_reports(r.report for r in self.records)
+
+
+_LISTENERS: list[TraceCollector] = []
+
+
+def record(rec: CallRecord) -> None:
+    for listener in _LISTENERS:
+        listener.records.append(rec)
+
+
+def active() -> bool:
+    """True when at least one collector is listening (lets the backend skip
+    schedule compilation entirely on hot paths nobody is watching)."""
+    return bool(_LISTENERS)
+
+
+@contextlib.contextmanager
+def collect():
+    """Scoped collection: yields the live list of CallRecords."""
+    c = TraceCollector().install()
+    try:
+        yield c.records
+    finally:
+        c.uninstall()
+
+
+def scaled(report: accounting.TraceReport,
+           repeats: int) -> accounting.TraceReport:
+    """Price a record replayed ``repeats`` times (e.g. a scanned layer body
+    compiled once but executed n_layers times)."""
+    if repeats < 0:
+        raise ValueError(f"repeats must be >= 0, got {repeats}")
+    return accounting.merge_reports([report] * repeats)
+
+
+def summarize(records, spec: ArraySpec | None = None) -> dict:
+    """JSON-ready roll-up of a record list (benchmarks / serve dumps)."""
+    records = list(records)
+    agg = accounting.merge_reports(r.report for r in records)
+    out = {"calls": len(records),
+           "aggregate": accounting.report_dict(agg)}
+    if spec is not None:
+        out["spec"] = dataclasses.asdict(spec)
+    return out

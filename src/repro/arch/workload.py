@@ -1,0 +1,109 @@
+"""Static workload extraction: a ModelConfig's SC-routed matmuls.
+
+``dense_workload(cfg, tokens)`` enumerates every matmul a forward pass
+routes through ``layers.dense`` (and therefore through ``sc_dot`` when
+``cfg.sc_backend`` is stochastic and an rng is plumbed), with explicit
+per-layer multiplicity —
+the scanned layer body compiles once but the hardware executes it
+``n_layers`` times, so a compile-time trace alone under-counts. This is
+what lets the trace benchmark and ``profile_cell --sc-trace`` price a
+PRODUCTION-shape forward pass without materializing any O(M·K·N) numerics.
+
+Attention score/value einsums and the SSM state scan are not SC-routed
+(they are not ``dense`` calls) and are deliberately absent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.arch.accounting import TraceReport, merge_reports
+from repro.arch.backend import schedule_call
+from repro.arch.spec import ArraySpec
+from repro.core.costmodel import CostParams
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulSite:
+    """One dense() site: (tokens, k) @ (k, n), executed ``count`` times."""
+
+    label: str
+    m: int
+    k: int
+    n: int
+    count: int
+
+    @property
+    def products(self) -> int:
+        return self.m * self.k * self.n * self.count
+
+
+def dense_workload(cfg, tokens: int) -> list[MatmulSite]:
+    """All dense() matmuls of one forward pass over ``tokens`` tokens."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    sites: list[MatmulSite] = []
+    add = lambda label, k, n, count=1: sites.append(
+        MatmulSite(label, tokens, k, n, count))
+
+    # Layer multiplicities come from the lm assembly itself so the static
+    # pricing can never drift from what the scan actually executes.
+    from repro.models import lm
+    n_layers = cfg.n_layers
+    if cfg.family in ("ssm", "hybrid"):
+        # Mamba2 block projections (ssm.py): z, x, B, C, dt in; out proj.
+        di, st = cfg.d_inner, cfg.ssm_state
+        n_ssm = lm.n_backbone_layers(cfg)
+        add("ssm.wz", d, di, n_ssm)
+        add("ssm.wx", d, di, n_ssm)
+        add("ssm.wB", d, st, n_ssm)
+        add("ssm.wC", d, st, n_ssm)
+        add("ssm.wdt", d, cfg.ssm_heads, n_ssm)
+        add("ssm.out", di, d, n_ssm)
+        if cfg.family == "hybrid":
+            n_shared = lm.n_shared_invocations(cfg)
+            _attn_sites(add, d, h, kvh, hd, n_shared, prefix="shared.")
+            _mlp_sites(add, cfg, n_shared, prefix="shared.")
+    else:
+        _attn_sites(add, d, h, kvh, hd, n_layers)
+        if cfg.family == "moe":
+            # Router + top_k expert FFN visits per token (dense equivalents).
+            add("moe.router", d, cfg.n_experts, n_layers)
+            visits = cfg.top_k + (1 if cfg.shared_expert else 0)
+            wi_cols = 2 * cfg.d_ff if cfg.mlp_variant == "swiglu" else cfg.d_ff
+            add("moe.wi", d, wi_cols, n_layers * visits)
+            add("moe.wo", cfg.d_ff, d, n_layers * visits)
+        else:
+            _mlp_sites(add, cfg, n_layers)
+    # The logits head (lm._logits) is dense() WITHOUT an rng, so it always
+    # runs the exact path — deliberately absent here (keep in sync).
+    return sites
+
+
+def _attn_sites(add, d, h, kvh, hd, count, prefix=""):
+    add(prefix + "attn.wq", d, h * hd, count)
+    add(prefix + "attn.wk", d, kvh * hd, count)
+    add(prefix + "attn.wv", d, kvh * hd, count)
+    add(prefix + "attn.wo", h * hd, d, count)
+
+
+def _mlp_sites(add, cfg, count, prefix=""):
+    wi_cols = 2 * cfg.d_ff if cfg.mlp_variant == "swiglu" else cfg.d_ff
+    add(prefix + "mlp.wi", cfg.d_model, wi_cols, count)
+    add(prefix + "mlp.wo", cfg.d_ff, cfg.d_model, count)
+
+
+def price_workload(sites, nbit: int, spec: ArraySpec | None = None,
+                   params: CostParams | None = None):
+    """Schedule every site on the array and price the whole pass.
+
+    Returns ``(per_site, total)`` where ``per_site`` is a list of
+    ``(site, TraceReport)`` — the site's report already includes its
+    ``count`` multiplicity — and ``total`` merges them all.
+    """
+    per_site: list[tuple[MatmulSite, TraceReport]] = []
+    for s in sites:
+        one = schedule_call(s.m, s.k, s.n, nbit, spec, params).report
+        per_site.append((s, merge_reports([one] * s.count)))
+    total = merge_reports(r for _, r in per_site)
+    return per_site, total

@@ -113,7 +113,8 @@ def csa_fold_cycles(rows: int) -> int:
     return csa_passes(rows + 2) * CSA_CYCLES_PER_PASS
 
 
-def csa_fa_cycles(n_mul: int, nbit: int, result_bits: int | None = None) -> int:
+def csa_fa_cycles(n_mul: int, nbit: int, result_bits: int | None = None,
+                  row_length: int = ROW_LENGTH) -> int:
     """Total cycles for the two-step pop-count of a MAC of ``n_mul`` MULs
     (paper Fig. 6): step 1 row-wise CSA folds every MUL's rows into one
     carry-save pair (constant lock-step cost per MUL — independent of the
@@ -121,12 +122,13 @@ def csa_fa_cycles(n_mul: int, nbit: int, result_bits: int | None = None) -> int:
     column-wise FA resolve, paid ONCE per MAC."""
     if result_bits is None:
         result_bits = max(1, math.ceil(math.log2(max(2, n_mul * nbit))))
-    compress = n_mul * csa_fold_cycles(rows_per_mul(nbit))
+    compress = n_mul * csa_fold_cycles(rows_per_mul(nbit, row_length))
     resolve = FA_CYCLES_PER_BIT * result_bits
     return compress + resolve
 
 
-def csa_fa_cycles_per_mul(n_mul: int, nbit: int) -> float:
+def csa_fa_cycles_per_mul(n_mul: int, nbit: int,
+                          row_length: int = ROW_LENGTH) -> float:
     """Amortized per-MUL pop-count cycles. Converges (Fig. 6) to the
     constant CSA fold cost as the FA resolve amortizes away."""
-    return csa_fa_cycles(n_mul, nbit) / max(n_mul, 1)
+    return csa_fa_cycles(n_mul, nbit, row_length=row_length) / max(n_mul, 1)

@@ -10,6 +10,10 @@ the while-loop trip counts the analyzer resolved.
 
     PYTHONPATH=src python -m repro.launch.profile_cell \
         --arch llama4-maverick-400b-a17b --shape train_4k [--multipod]
+
+``--sc-trace`` additionally prices the cell's dense() workload on the
+SOT-MRAM array simulator (repro.arch): per-site pulse-schedule cycles and
+energy at the production shape, independent of the XLA lowering.
 """
 
 import argparse           # noqa: E402
@@ -49,14 +53,46 @@ def profile(arch: str, shape: str, multi_pod: bool = False, top: int = 18):
     return result, hc
 
 
+def sc_trace(arch: str, shape: str, nbit: int = 1024, top: int = 12):
+    """Price the cell's dense() workload on the SOT-MRAM array simulator.
+
+    Static analysis (repro.arch.workload): no lowering, no numerics — the
+    pulse-schedule compiler runs per matmul site with explicit layer
+    multiplicity, so production shapes price in milliseconds.
+    """
+    from repro import arch as arch_sim
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    tokens = sh.global_batch * (1 if sh.kind == "decode" else sh.seq_len)
+    sites = arch_sim.dense_workload(cfg, tokens)
+    per_site, total = arch_sim.price_workload(sites, nbit)
+    print(f"\n-- SOT-MRAM array trace: {arch} x {shape} "
+          f"({tokens} tokens, nbit={nbit}, spec={arch_sim.DEFAULT_SPEC}) --")
+    per_site.sort(key=lambda sr: -sr[1].cycles)
+    for s, r in per_site[:top]:
+        print(f"  {s.label:<14s} {s.m}x{s.k}x{s.n} x{s.count:<3d} "
+              f"{r.cycles:>14,d} cyc  {r.energy_pj / 1e6:10.2f} µJ  "
+              f"util={r.subarray_util:.2f}")
+    print(f"  {'TOTAL':<14s} {total.products:,} MULs  "
+          f"{total.cycles:>14,d} cyc  {total.energy_pj / 1e6:10.2f} µJ  "
+          f"util={total.subarray_util:.2f}")
+    return total
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(SHAPES))
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--top", type=int, default=18)
+    ap.add_argument("--sc-trace", action="store_true",
+                    help="also price the dense() workload on the SOT-MRAM "
+                         "array simulator (repro.arch)")
+    ap.add_argument("--sc-nbit", type=int, default=1024)
     args = ap.parse_args()
     profile(args.arch, args.shape, args.multipod, args.top)
+    if args.sc_trace:
+        sc_trace(args.arch, args.shape, args.sc_nbit, args.top)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,8 @@ package is the software analogue: ONE operation interface
 
 with interchangeable array-level implementations behind a registry
 (``exact``, ``moment``, ``bitexact``, ``pallas_moment``,
-``pallas_bitexact``), one canonical operand encoding, and the
+``pallas_bitexact``, plus the lazily-registered ``array`` architecture
+simulator from :mod:`repro.arch`), one canonical operand encoding, and the
 straight-through gradient applied once at the dispatch boundary so every
 backend is trainable. The model stack (models/layers.py:dense), the
 serving engine, the trainer, and the benchmarks all route here.

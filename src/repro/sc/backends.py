@@ -2,7 +2,9 @@
 
 Five realizations of the paper's in-memory MUL engine lifted to matmul
 shape, all sharing the canonical encoding in :mod:`repro.sc.encoding` and
-all reached exclusively through :func:`repro.sc.sc_dot`:
+all reached exclusively through :func:`repro.sc.sc_dot` (a sixth,
+``array`` — the array-level architecture simulator — lives in
+:mod:`repro.arch.backend` and registers lazily on first use):
 
 * ``exact``           — plain MXU matmul (deterministic reference).
 * ``moment``          — CLT moment-matched jnp path: 3 dots + 1 Gaussian

@@ -30,6 +30,12 @@ from repro.sc.config import ScConfig
 
 _BACKENDS: dict = {}
 
+# Backends living outside repro.sc register on first use: name -> module
+# whose import performs the @register_backend call. Keeps repro.sc free of
+# upward dependencies (repro.arch imports repro.sc, not vice versa) while
+# ScConfig(backend="array") still works with no explicit import.
+_LAZY_BACKENDS: dict = {"array": "repro.arch.backend"}
+
 
 def register_backend(name: str):
     """Decorator: register ``fn(key, x2d, w, cfg) -> y2d`` under ``name``."""
@@ -40,16 +46,19 @@ def register_backend(name: str):
 
 
 def get_backend(name: str):
+    if name not in _BACKENDS and name in _LAZY_BACKENDS:
+        import importlib
+        importlib.import_module(_LAZY_BACKENDS[name])
     try:
         return _BACKENDS[name]
     except KeyError:
         raise ValueError(
             f"unknown SC backend {name!r}; registered: "
-            f"{sorted(_BACKENDS)}") from None
+            f"{sorted(set(_BACKENDS) | set(_LAZY_BACKENDS))}") from None
 
 
 def available_backends() -> tuple:
-    return tuple(sorted(_BACKENDS))
+    return tuple(sorted(set(_BACKENDS) | set(_LAZY_BACKENDS)))
 
 
 def _dispatch(key, x, w, cfg: ScConfig):

@@ -10,6 +10,13 @@ lowers). Sampling is per-slot: each request decodes with its OWN
 temperature (greedy slots stay deterministic), and the engine rng folds
 once per tick. When ``cfg.sc_backend != "exact"`` every prefill/decode
 matmul routes through the SC substrate (repro.sc) with a per-call key.
+
+With ``collect_arch_trace=True`` and ``cfg.sc_backend == "array"``, the
+engine keeps an arch trace collector installed: every prefill/decode
+COMPILATION records its pulse-schedule cost (one record per compiled
+shape — jit caching means steady-state ticks add no new records), and
+``arch_report()`` returns the aggregate cycles/energy/utilization of
+everything compiled so far. Call ``close()`` to detach the collector.
 """
 
 from __future__ import annotations
@@ -42,7 +49,8 @@ class ServeConfig:
 
 
 class ServingEngine:
-    def __init__(self, params, cfg, scfg: ServeConfig):
+    def __init__(self, params, cfg, scfg: ServeConfig,
+                 collect_arch_trace: bool = False):
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -57,6 +65,31 @@ class ServingEngine:
         self._decode = jax.jit(partial(lm.decode_step, cfg=cfg))
         self._prefill = jax.jit(
             partial(lm.prefill, cfg=cfg, max_len=scfg.max_len))
+        self.arch_collector = None
+        if collect_arch_trace and cfg.sc_backend == "array":
+            from repro import arch
+            self.arch_collector = arch.TraceCollector().install()
+
+    def arch_report(self):
+        """Aggregate arch cost of everything compiled so far (None when
+        trace collection is off or nothing was recorded). NOTE: the
+        collector hears every array-backend dispatch in the process while
+        installed (same semantics as ``arch.collect()``), not only this
+        engine's — run one traced engine at a time for a clean bill."""
+        if self.arch_collector is None or not self.arch_collector.records:
+            return None
+        return self.arch_collector.aggregate()
+
+    def close(self):
+        """Detach the arch trace collector (records stay readable)."""
+        collector = getattr(self, "arch_collector", None)
+        if collector is not None:
+            collector.uninstall()
+
+    def __del__(self):
+        # A dropped engine must not leave its collector in the global
+        # listener list (would leak records and keep tracing active).
+        self.close()
 
     def _next_key(self):
         self._rng, k = jax.random.split(self._rng)

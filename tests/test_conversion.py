@@ -106,3 +106,26 @@ def test_operating_current_drives_nondeterministic_region():
     mid = conversion.operand_to_tau(512, CFG)
     p = float(physics.p_unswitched(mid, physics.I_C_UA))
     assert 0.05 < p < 0.95
+
+
+def test_conversion_roundtrip_at_boundary_operands():
+    """The three fixed-point boundary operands of the n-bit grid survive
+    the full LUT → DTC → device → decode chain exactly: 0 (full-scale
+    pulse, multiply-by-zero), 1 (longest finite pulse), and the max
+    magnitude 2^n - 1 (shortest pulse, rounds to zero duration)."""
+    for x in (0, 1, CFG.levels - 1):
+        tau = conversion.operand_to_tau(x, CFG)
+        p = conversion.tau_to_probability(tau)
+        x_back = int(conversion.decode_probability(p, CFG))
+        assert x_back == x, (x, float(tau), float(p))
+
+
+def test_fx16_bias_words_at_boundaries():
+    """encoding.to_fx16 at the fx16 boundaries: p=0 -> word 0, p=1 clamps
+    to 65535 (not overflowing to 65536), and the represented bias is
+    within one LSB of the request."""
+    from repro.sc import encoding
+    words = np.asarray(encoding.to_fx16(jnp.array([0.0, 0.5, 1.0])))
+    np.testing.assert_array_equal(words, [0, 32768, 65535])
+    back = words.astype(np.float64) / 65536.0
+    assert np.all(np.abs(back - np.array([0.0, 0.5, 1.0])) <= 1.0 / 65536.0)

@@ -91,3 +91,61 @@ def test_full_comparison_structure():
     assert set(table) == {"SC+PIM (APC)", "SC+PIM (CSA)", "SC", "PIM"}
     for v in table.values():
         assert v.cycles > 0 and v.energy_pj > 0 and v.area_um2 > 0
+
+
+# --------------------------- CostParams dataclass ---------------------------
+
+
+def test_default_params_mirror_module_constants():
+    p = cm.DEFAULT_PARAMS
+    assert p.row_length == cm.ROW_LENGTH
+    assert p.sa_read_cycles == cm.SA_READ_CYCLES
+    assert p.drisa_8bit_cycles == cm.DRISA_8BIT_CYCLES
+    assert p.apc_energy_pj == cm.APC_ENERGY_PJ
+    assert p.sng_area_fraction == cm.SNG_AREA_FRACTION
+
+
+def test_cost_params_hashable_and_frozen():
+    p = cm.CostParams()
+    assert hash(p) == hash(cm.CostParams())
+    assert {p: 1}[cm.CostParams()] == 1          # usable as a dict key
+    with pytest.raises(Exception):
+        p.row_length = 512                       # frozen
+
+
+def test_cost_params_sweep_is_pure():
+    """A swept instance changes results without touching the defaults —
+    the thread-safety property the module-global knobs never had."""
+    slow_sng = cm.CostParams(sng_bits_per_cycle=32)
+    assert cm.cycles_sc(10, slow_sng) > cm.cycles_sc(10)
+    assert cm.cycles_sc(10) == cm.cycles_sc(10, cm.DEFAULT_PARAMS)
+    # ratios move accordingly; defaults untouched
+    r = cm.headline_ratios(10, slow_sng)
+    assert r["speedup_vs_sc"] > cm.headline_ratios(10)["speedup_vs_sc"]
+
+
+def test_cost_params_row_length_sweep():
+    """Longer rows -> fewer rows per MUL -> shallower merge tree."""
+    long_rows = cm.CostParams(row_length=1024)
+    assert cm.cycles_scpim_apc(10, long_rows) < cm.cycles_scpim_apc(10)
+    assert long_rows.rows_per_mul(10) == 1
+    assert long_rows.merge_cycles(1) == 0
+
+
+def test_cost_params_row_length_reaches_csa_path():
+    """The CSA pop-count folds per-MUL rows, so row_length must sweep it
+    too (fewer rows per MUL -> fewer 3:2 fold passes)."""
+    long_rows = cm.CostParams(row_length=1024)
+    assert cm.cycles_scpim_csa(10, 100, long_rows) < cm.cycles_scpim_csa(10, 100)
+    e_long, _ = cm.energy_scpim(10, "csa", 100, long_rows)
+    e_base, _ = cm.energy_scpim(10, "csa", 100)
+    assert e_long < e_base
+
+
+def test_cost_params_derived_energy_helpers():
+    p = cm.DEFAULT_PARAMS
+    assert p.preset_energy_pj_per_cell() > p.pulse_energy_pj_per_cell()
+    total, bd = cm.energy_scpim(10, "apc")
+    assert bd["init"] == pytest.approx(1024 * p.preset_energy_pj_per_cell())
+    assert bd["conversion"] == pytest.approx(
+        2 * p.conversion_energy_pj_per_operand())

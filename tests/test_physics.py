@@ -84,6 +84,32 @@ def test_switching_energy_scales_with_tau_and_current():
     np.testing.assert_allclose(e3, 4 * e1, rtol=1e-6)
 
 
+def test_p_usw_monotone_in_tau_on_dense_grid():
+    """Deterministic (no-hypothesis) edge sweep: survival is strictly
+    non-increasing in pulse duration across the whole DTC range, at weak,
+    operating, and over-driven currents."""
+    tau = jnp.linspace(1e-3, 16.0, 512)
+    for i_ua in (40.0, physics.I_C_UA, physics.I_C_UA * 1.25):
+        p = np.asarray(physics.p_unswitched(tau, i_ua))
+        assert np.all(np.diff(p) <= 1e-12), i_ua
+        assert np.all((p >= 0.0) & (p <= 1.0))
+
+
+def test_p_usw_monotone_in_current_on_dense_grid():
+    i = jnp.linspace(40.0, 120.0, 512)
+    for tau in (0.01, 0.5, physics.PRESET_TAU_NS):
+        p = np.asarray(physics.p_unswitched(tau, i))
+        assert np.all(np.diff(p) <= 1e-12), tau
+
+
+def test_preset_survival_below_1e26():
+    """The over-driven preset pulse leaves P_usw < 1e-26 — every cell is
+    deterministically initialized before the stochastic pulses (§III-B)."""
+    p = physics.p_unswitched(physics.PRESET_TAU_NS,
+                             physics.I_C_UA * physics.PRESET_I_FACTOR)
+    assert float(p) < 1e-26
+
+
 def test_per_cell_ic_array_broadcasts():
     ic = jnp.array([70.0, 80.0, 90.0])
     p = physics.p_unswitched(0.5, 80.0, i_c_ua=ic)
