@@ -29,10 +29,12 @@ from repro.arch.tiler import (                                     # noqa: F401
 from repro.arch.schedule import (                                  # noqa: F401
     OPS, Command, compile_schedule, format_trace, makespan)
 from repro.arch.accounting import (                                # noqa: F401
-    TraceReport, account, merge_reports, report_dict)
+    TraceReport, account, merge_concurrent_reports, merge_reports,
+    report_dict)
 from repro.arch.trace import (                                     # noqa: F401
     CallRecord, TraceCollector, collect, scaled, summarize)
 from repro.arch.backend import (                                   # noqa: F401
     current_params, current_spec, schedule_call, use_params, use_spec)
 from repro.arch.workload import (                                  # noqa: F401
-    MatmulSite, dense_workload, price_workload)
+    MatmulSite, dense_workload, price_workload, price_workload_sharded,
+    shard_site)

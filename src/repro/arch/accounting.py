@@ -91,6 +91,45 @@ def account(trace: tuple[Command, ...], spec: ArraySpec,
         cycles_by_op=cycles_by_op, energy_by_op=energy_by_op)
 
 
+def merge_concurrent_reports(reports) -> TraceReport:
+    """Aggregate reports of calls running AT THE SAME TIME on disjoint
+    mesh slices (one report per shard of a sharded ``sc_dot``).
+
+    Shards are concurrent banks, not queued calls: the makespan is the
+    slowest shard (max, not sum), energy and products add, and the per-op
+    cycle breakdown adds (it counts op-cycles *executed* across the
+    combined hardware, like busy-cycles — so ``cycles_by_op`` may exceed
+    ``cycles``, exactly as it does for parallel banks inside one trace).
+    ``subarray_util`` re-normalizes busy subarray-cycles against the
+    combined offer (n_shards × makespan worth of chips), so idle tails on
+    fast shards count against utilization; ``cell_occupancy`` stays a
+    cycle-weighted mean (it is defined over touched rows only).
+    """
+    reports = list(reports)
+    if not reports:
+        return TraceReport(0, 0.0, 0, 0.0, 0.0, {}, {})
+    cycles = max(r.cycles for r in reports)
+    n = len(reports)
+    cbo: dict = {}
+    ebo: dict = {}
+    for r in reports:
+        for op, c in r.cycles_by_op.items():
+            cbo[op] = cbo.get(op, 0) + c
+        for op, e in r.energy_by_op.items():
+            ebo[op] = ebo.get(op, 0.0) + e
+    busy = sum(r.subarray_util * r.cycles for r in reports)
+    occ_cycles = sum(r.cycles for r in reports)
+    occ = (sum(r.cell_occupancy * r.cycles for r in reports) / occ_cycles
+           if occ_cycles else 0.0)
+    return TraceReport(
+        cycles=cycles,
+        energy_pj=sum(r.energy_pj for r in reports),
+        products=sum(r.products for r in reports),
+        subarray_util=busy / (n * cycles) if cycles else 0.0,
+        cell_occupancy=occ,
+        cycles_by_op=cbo, energy_by_op=ebo)
+
+
 def merge_reports(reports) -> TraceReport:
     """Aggregate per-call reports into one (calls serialize on the chip:
     cycles add; utilizations combine cycle-weighted)."""

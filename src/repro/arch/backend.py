@@ -103,7 +103,16 @@ def array(key, x, w, cfg: ScConfig):
     """Array-level execution: schedule + account (trace time), then the
     size-matched bit-exact numerics."""
     if trace.active():
+        from repro.sc import sharded as sc_sharded
         rec = schedule_call(x.shape[0], x.shape[1], w.shape[1], cfg.nbit)
+        shards = sc_sharded.current_shard_count()
+        if shards != 1:
+            # Inside a sharded dispatch the shard_map body traces ONCE for
+            # all shards; x/w here are already one shard's slice, so the
+            # record carries the concurrency multiplicity instead of being
+            # re-recorded per shard.
+            rec = trace.CallRecord(plan=rec.plan, trace=rec.trace,
+                                   report=rec.report, shards=shards)
         trace.record(rec)
     else:
         # Still validate the mapping (a call that cannot be scheduled on the

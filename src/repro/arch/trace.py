@@ -34,18 +34,35 @@ from repro.arch.tiler import TilePlan, plan_summary
 
 @dataclasses.dataclass(frozen=True)
 class CallRecord:
-    """One compiled ``sc_dot`` call on the array: plan + trace + price."""
+    """One compiled ``sc_dot`` call on the array: plan + trace + price.
+
+    ``shards`` is the mesh-shard multiplicity the call was traced under
+    (``repro.sc.shard_scope``): ``shard_map`` traces its body once for
+    every shard, so ``plan``/``trace``/``report`` describe ONE shard's
+    slice and ``shards`` says how many such slices run concurrently on
+    disjoint mesh devices.  ``effective_report`` merges them as
+    concurrent banks (makespan = slowest shard; energy/products add).
+    """
 
     plan: TilePlan
     trace: tuple[Command, ...]
     report: accounting.TraceReport
+    shards: int = 1
 
     @property
     def shape(self) -> tuple[int, int, int]:
         return (self.plan.m, self.plan.k, self.plan.n)
 
+    @property
+    def effective_report(self) -> accounting.TraceReport:
+        if self.shards == 1:
+            return self.report
+        return accounting.merge_concurrent_reports(
+            [self.report] * self.shards)
+
     def as_dict(self) -> dict:
         return {"plan": plan_summary(self.plan),
+                "shards": self.shards,
                 "report": accounting.report_dict(self.report)}
 
 
@@ -68,7 +85,11 @@ class TraceCollector:
         self.records.clear()
 
     def aggregate(self) -> accounting.TraceReport:
-        return accounting.merge_reports(r.report for r in self.records)
+        """Serial merge over recorded calls, each first merged across its
+        concurrent mesh shards (so a sharded matmul's makespan is its
+        slowest shard, not the sum of all shards)."""
+        return accounting.merge_reports(
+            r.effective_report for r in self.records)
 
 
 _LISTENERS: list[TraceCollector] = []
@@ -107,7 +128,7 @@ def scaled(report: accounting.TraceReport,
 def summarize(records, spec: ArraySpec | None = None) -> dict:
     """JSON-ready roll-up of a record list (benchmarks / serve dumps)."""
     records = list(records)
-    agg = accounting.merge_reports(r.report for r in records)
+    agg = accounting.merge_reports(r.effective_report for r in records)
     out = {"calls": len(records),
            "aggregate": accounting.report_dict(agg)}
     if spec is not None:

@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.arch.accounting import TraceReport, merge_reports
+from repro.arch.accounting import (
+    TraceReport, merge_concurrent_reports, merge_reports)
 from repro.arch.backend import schedule_call
 from repro.arch.spec import ArraySpec
 from repro.core.costmodel import CostParams
@@ -105,5 +106,41 @@ def price_workload(sites, nbit: int, spec: ArraySpec | None = None,
     for s in sites:
         one = schedule_call(s.m, s.k, s.n, nbit, spec, params).report
         per_site.append((s, merge_reports([one] * s.count)))
+    total = merge_reports(r for _, r in per_site)
+    return per_site, total
+
+
+def shard_site(site: MatmulSite, data: int = 1, model: int = 1) -> MatmulSite:
+    """One mesh slice's share of ``site`` under the SC sharding rules:
+    rows (m) split over the ``data`` span, contraction (k) over ``model``
+    (ceil-division — indivisible dims cost the padded shard)."""
+    ceil = lambda a, b: -(-a // b)
+    return dataclasses.replace(site, m=ceil(site.m, max(data, 1)),
+                               k=ceil(site.k, max(model, 1)))
+
+
+def price_workload_sharded(sites, nbit: int, *, data: int = 1,
+                           model: int = 1, spec: ArraySpec | None = None,
+                           params: CostParams | None = None):
+    """Price a workload executed mesh-sharded: ``data × model`` chips,
+    each running one shard of every matmul concurrently.
+
+    Each site is priced as its per-shard slice (rows ÷ ``data``,
+    contraction ÷ ``model``; see :func:`shard_site`), the shard reports
+    merge as CONCURRENT banks (makespan = slowest shard, energy and
+    products add — the psum/adder-tree merge itself is free, like MERGE
+    in the single-chip trace), and sites serialize as usual.  With
+    ``data == model == 1`` this is exactly :func:`price_workload`.
+
+    Returns ``(per_site, total)`` shaped like :func:`price_workload`.
+    """
+    n_shards = max(data, 1) * max(model, 1)
+    per_site: list[tuple[MatmulSite, TraceReport]] = []
+    for s in sites:
+        piece = shard_site(s, data, model)
+        one = schedule_call(piece.m, piece.k, piece.n, nbit,
+                           spec, params).report
+        sharded = merge_concurrent_reports([one] * n_shards)
+        per_site.append((s, merge_reports([sharded] * s.count)))
     total = merge_reports(r for _, r in per_site)
     return per_site, total

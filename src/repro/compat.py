@@ -1,8 +1,10 @@
 """Version-compat helpers for jax API moves (this container pins 0.4.x).
 
-Mesh- and shard_map-shaped shims live next to their single consumers
-(``launch/specs.abstract_mesh``, ``distributed/compression._shard_map``);
-helpers with more than one call site go here.
+Mesh-shaped shims live next to their single consumers
+(``launch/specs.abstract_mesh``); helpers with more than one call site go
+here — ``shard_map_compat`` serves both the gradient-compression pod
+reduction (``distributed/compression``) and the mesh-sharded SC substrate
+(``sc/sharded``).
 """
 
 from __future__ import annotations
@@ -16,3 +18,45 @@ def tree_flatten_with_path(tree, is_leaf=None):
     fn = getattr(jax.tree, "flatten_with_path", None) or \
         jax.tree_util.tree_flatten_with_path
     return fn(tree, is_leaf=is_leaf)
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, manual_axes=None,
+                     check_rep=True):
+    """Version-compat shard_map, manual over ``manual_axes``.
+
+    ``manual_axes=None`` means fully manual (every mesh axis).  jax >= 0.5
+    spells partial-manual ``jax.shard_map(..., axis_names=...)``; 0.4.x
+    spells it ``jax.experimental.shard_map.shard_map(..., auto=<the
+    rest>)`` and its partial-auto form has no eager path, so that branch
+    is wrapped in ``jax.jit``.
+    """
+    import inspect
+
+    if manual_axes is None:
+        manual_axes = frozenset(mesh.axis_names)
+
+    def rep_kwarg(fn):
+        # The replication-check flag was renamed check_rep -> check_vma;
+        # forward it under whichever name this jax spells (callers like
+        # sc_dot_sharded disable it deliberately, so dropping it silently
+        # would resurface rep-check failures on upgrade).
+        params = inspect.signature(fn).parameters
+        for name in ("check_vma", "check_rep"):
+            if name in params:
+                return {name: check_rep}
+        return {}
+
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(manual_axes),
+                             **rep_kwarg(jax.shard_map))
+    from jax.experimental.shard_map import shard_map
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    if not auto:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, **rep_kwarg(shard_map))
+    mapped = shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       auto=auto, **rep_kwarg(shard_map))
+    # 0.4.x partial-auto shard_map has no eager path — trace it always
+    return jax.jit(mapped)

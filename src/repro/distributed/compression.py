@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map_compat
+
 
 def _quantize(g):
     scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-20) / 127.0
@@ -86,19 +88,6 @@ def compressed_grads(grad_fn, mesh, *, has_aux: bool = False):
     return wrapped
 
 
-def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
-    """Version-compat shard_map: manual over ``manual_axes`` only.
-
-    jax >= 0.5 spells this ``jax.shard_map(..., axis_names=...)``; 0.4.x
-    spells it ``jax.experimental.shard_map.shard_map(..., auto=<the rest>)``.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs,
-                             axis_names=set(manual_axes))
-    from jax.experimental.shard_map import shard_map
-    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
-    mapped = shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       auto=auto)
-    # 0.4.x partial-auto shard_map has no eager path — trace it always
-    return jax.jit(mapped)
+# Version-compat shard_map now lives in repro.compat (it gained a second
+# consumer: the mesh-sharded SC substrate in repro.sc.sharded).
+_shard_map = shard_map_compat

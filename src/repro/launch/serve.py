@@ -13,8 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_local_mesh
 from repro.models import lm, params as params_lib
 from repro.serve import Request, ServeConfig, ServingEngine
+from repro.sharding import sc_shard_rules
 
 
 def main(argv=None):
@@ -27,6 +29,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the SC substrate over a local device mesh "
+                         "(slots map to data shards; needs a stochastic "
+                         "--arch sc_backend)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model axis size of the local mesh (--mesh)")
     args = ap.parse_args(argv)
 
     cfg = (get_smoke_config(args.arch) if args.smoke
@@ -38,8 +46,14 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = params_lib.init_params(key, lm.lm_param_specs(cfg),
                                     cfg.param_dtype)
+    mesh = rules = None
+    if args.mesh:
+        mesh = make_local_mesh(args.model_parallel)
+        rules = sc_shard_rules(mesh)
+        print(f"serving on mesh {dict(mesh.shape)}")
     engine = ServingEngine(params, cfg, ServeConfig(
-        slots=args.slots, max_len=args.max_len, seed=args.seed))
+        slots=args.slots, max_len=args.max_len, seed=args.seed),
+        mesh=mesh, shard_rules=rules)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     for rid in range(args.requests):

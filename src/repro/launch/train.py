@@ -13,12 +13,14 @@ identical; only device count changes.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro import checkpoint
+from repro import checkpoint, sc
+from repro.sharding import sc_shard_rules
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticLMData, make_batch
 from repro.data.pipeline import make_embedding_batch
@@ -70,6 +72,14 @@ def main(argv=None):
     state = train_state_init(key, cfg, tcfg)
     step_fn = jax.jit(make_train_step(cfg, tcfg, mesh), donate_argnums=(0,))
 
+    # Mesh-sharded SC substrate: while this scope is active, every dense()
+    # in the traced step shards its stochastic matmul over the mesh
+    # (sc_dot_sharded; no-op on a single device — size-1 axes drop out).
+    if cfg.sc_backend != "exact" and len(jax.devices()) > 1:
+        substrate_scope = lambda: sc.use_mesh(mesh, sc_shard_rules(mesh))
+    else:
+        substrate_scope = contextlib.nullcontext
+
     def batch_fn(step):
         if cfg.frontend == "embeddings":
             return make_embedding_batch(data, cfg.d_model, step)
@@ -90,7 +100,8 @@ def main(argv=None):
     losses = []
 
     def logged_step(state, batch):
-        state, metrics = step_fn(state, batch)
+        with substrate_scope():
+            state, metrics = step_fn(state, batch)
         losses.append(float(metrics["loss"]))
         step = len(losses) + start_step
         if step % 5 == 0 or step == 1:

@@ -27,14 +27,25 @@ def dense(x, w, cfg, key=None, bias=None):
     """x @ w with the configured multiplication substrate.
 
     x: (..., K); w: (K, N) (or pre-reshaped 2-D view of a fused projection).
-    SC modes need a PRNG key; exact mode ignores it.
+    SC modes need a PRNG key; exact mode ignores it.  Inside a
+    ``sc.use_mesh(mesh)`` scope stochastic matmuls shard over the mesh via
+    ``sc_dot_sharded`` (rows over the data axes, contraction over model
+    with a psum merge) — the scope is consulted at trace time, so callers
+    scale across devices with no signature changes.
     """
     if cfg.sc_backend == "exact" or key is None:
         y = jnp.dot(x, w.astype(x.dtype))
     else:
         sc_cfg = sc.ScConfig(backend=cfg.sc_backend, nbit=cfg.sc_nbit)
-        y = sc.sc_dot(key, x.astype(jnp.float32), w.astype(jnp.float32),
-                      sc_cfg).astype(x.dtype)
+        scope = sc.active_mesh()
+        if scope is not None:
+            mesh, rules = scope
+            y = sc.sc_dot_sharded(
+                key, x.astype(jnp.float32), w.astype(jnp.float32), sc_cfg,
+                mesh=mesh, rules=rules).astype(x.dtype)
+        else:
+            y = sc.sc_dot(key, x.astype(jnp.float32), w.astype(jnp.float32),
+                          sc_cfg).astype(x.dtype)
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y

@@ -12,6 +12,23 @@ simulator from :mod:`repro.arch`), one canonical operand encoding, and the
 straight-through gradient applied once at the dispatch boundary so every
 backend is trainable. The model stack (models/layers.py:dense), the
 serving engine, the trainer, and the benchmarks all route here.
+
+Scale-out lives in :mod:`repro.sc.sharded`: ``sc_dot_sharded`` splits one
+contraction across a JAX device mesh (batch rows over the data axes,
+contraction over the model axis with a psum merge), and ``use_mesh``
+makes the model stack route every stochastic matmul through it
+automatically.  See ``docs/scaling.md``.
+
+Public API (see ``docs/backends.md`` for the selection guide):
+
+* :class:`~repro.sc.config.ScConfig` — one frozen config per substrate.
+* :func:`~repro.sc.registry.sc_dot` — the dispatch entry point.
+* :func:`~repro.sc.registry.register_backend` /
+  :func:`~repro.sc.registry.get_backend` /
+  :func:`~repro.sc.registry.available_backends` — the registry hooks.
+* :func:`~repro.sc.sharded.sc_dot_sharded` /
+  :func:`~repro.sc.sharded.use_mesh` /
+  :class:`~repro.sc.sharded.ScShardRules` — the mesh-sharded path.
 """
 
 from repro.sc.config import ScConfig                      # noqa: F401
@@ -19,3 +36,6 @@ from repro.sc.registry import (                           # noqa: F401
     available_backends, get_backend, register_backend, sc_dot)
 from repro.sc import backends as _backends                # noqa: F401  (registers)
 from repro.sc import encoding                             # noqa: F401
+from repro.sc.sharded import (                            # noqa: F401
+    DEFAULT_RULES, ScShardRules, active_mesh, current_shard_count,
+    resolve_rules, sc_dot_sharded, shard_counts, shard_scope, use_mesh)

@@ -15,6 +15,27 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class ScConfig:
+    """Configuration of one SC matmul substrate (frozen, hashable).
+
+    Attributes:
+        backend: name of a backend in the ``repro.sc`` registry —
+            one of ``exact | moment | bitexact | pallas_moment |
+            pallas_bitexact | array`` out of the box (see
+            ``docs/backends.md`` for the trade-offs), or anything
+            registered via :func:`repro.sc.register_backend`.
+        nbit: stochastic bits per scalar product — the number of MRAM
+            cells each MUL occupies (paper: 2**operand_bits).  Error
+            std scales as 1/sqrt(nbit).
+        operand_bits: resolution of the LUT/DTC operand grid encoded
+            probabilities snap to (paper §III-A: 10).
+        quantize: apply that operand-grid quantization (disable for
+            backend-numerics studies on un-quantized operands).
+        block_m / block_n / block_k: Pallas moment-kernel tile shape
+            (clamped per-call to the operand shape).
+        interpret: run Pallas kernels in interpreter mode (CPU-safe; this
+            container).  Real TPUs flip it off to compile through Mosaic.
+    """
+
     backend: str = "exact"      # name in the repro.sc registry
     nbit: int = 1024            # stochastic bits per scalar product
     operand_bits: int = 10      # quantization of encoded probabilities (paper: 10)
@@ -28,4 +49,5 @@ class ScConfig:
     interpret: bool = True
 
     def replace(self, **kw) -> "ScConfig":
+        """Functional update, e.g. ``cfg.replace(backend="moment")``."""
         return dataclasses.replace(self, **kw)

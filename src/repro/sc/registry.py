@@ -38,7 +38,16 @@ _LAZY_BACKENDS: dict = {"array": "repro.arch.backend"}
 
 
 def register_backend(name: str):
-    """Decorator: register ``fn(key, x2d, w, cfg) -> y2d`` under ``name``."""
+    """Decorator: register an SC matmul backend under ``name``.
+
+    The decorated function must have signature
+    ``fn(key, x2d, w, cfg) -> y2d`` with ``x2d: (M, K)``, ``w: (K, N)``
+    float32 and return ``(M, N)`` float32; ``sc_dot`` handles leading-dim
+    flattening, dispatch, and the straight-through gradient, so the
+    backend itself needs no differentiation rules.  Registration makes
+    the name selectable everywhere a backend is named — ``ScConfig``,
+    ``ModelConfig.sc_backend``, the launchers' ``--sc-backend`` flags.
+    """
     def deco(fn):
         _BACKENDS[name] = fn
         return fn
@@ -46,6 +55,11 @@ def register_backend(name: str):
 
 
 def get_backend(name: str):
+    """Resolve a backend name to its function (importing lazy entries).
+
+    Raises ``ValueError`` naming the registered backends when ``name`` is
+    unknown.
+    """
     if name not in _BACKENDS and name in _LAZY_BACKENDS:
         import importlib
         importlib.import_module(_LAZY_BACKENDS[name])
@@ -58,6 +72,7 @@ def get_backend(name: str):
 
 
 def available_backends() -> tuple:
+    """Sorted names of every selectable backend (lazy ones included)."""
     return tuple(sorted(set(_BACKENDS) | set(_LAZY_BACKENDS)))
 
 
@@ -70,11 +85,21 @@ def _dispatch(key, x, w, cfg: ScConfig):
 
 @partial(jax.custom_vjp, nondiff_argnums=(3,))
 def sc_dot(key, x, w, cfg: ScConfig = ScConfig()):
-    """x @ w through the configured SC backend. x: (..., K), w: (K, N).
+    """``x @ w`` through the configured SC backend.
 
-    Stochastic backends need a PRNG ``key``; ``exact`` ignores it. The
-    gradient is straight-through (exact-product jacobian) regardless of
-    backend.
+    Args:
+        key: PRNG key driving the stochastic bits (``exact`` ignores it;
+            same key + same cfg ⇒ same bits on every stochastic backend).
+        x: (..., K) float operand; leading dims flatten to the row dim.
+        w: (K, N) float operand.
+        cfg: :class:`~repro.sc.config.ScConfig` naming the backend and
+            its knobs (static under ``jit``).
+
+    Returns:
+        (..., N) float32 — the SC estimate of the product.  The gradient
+        is straight-through (exact-product jacobian) regardless of
+        backend, so any registered backend is trainable.  For the
+        mesh-sharded variant see :func:`repro.sc.sharded.sc_dot_sharded`.
     """
     return _dispatch(key, x, w, cfg)
 

@@ -17,11 +17,26 @@ COMPILATION records its pulse-schedule cost (one record per compiled
 shape — jit caching means steady-state ticks add no new records), and
 ``arch_report()`` returns the aggregate cycles/energy/utilization of
 everything compiled so far. Call ``close()`` to detach the collector.
+
+Cross-device batching: pass ``mesh=`` and the continuous-batching slot
+grid maps onto the mesh — the decode batch dimension (slots) shards over
+the mesh's data axes and every SC contraction splits over the model axis
+(``sc.use_mesh`` is entered around prefill/decode tracing, so
+``layers.dense`` routes through ``sc_dot_sharded`` automatically).
+Per-slot sampling semantics are unchanged: each request keeps its OWN
+temperature and greedy slots stay deterministic whatever their batch
+neighbours do.  ``slots`` must be a multiple of the mesh's
+data-parallel span so every mesh slice owns a whole number of slots.
+With arch tracing on, sharded dispatches record per-shard traces stamped
+with their shard multiplicity, and ``arch_report()`` merges them as
+concurrent banks (makespan = slowest shard).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -50,10 +65,24 @@ class ServeConfig:
 
 class ServingEngine:
     def __init__(self, params, cfg, scfg: ServeConfig,
-                 collect_arch_trace: bool = False):
+                 collect_arch_trace: bool = False, mesh=None,
+                 shard_rules=None):
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
+        self.mesh = mesh
+        self.shard_rules = shard_rules
+        self._stochastic_substrate = cfg.sc_backend != "exact"
+        if mesh is not None and self._stochastic_substrate:
+            from repro import sc
+            batch_axes = (shard_rules or sc.DEFAULT_RULES).batch
+            sizes = dict(mesh.shape)
+            dp = math.prod(sizes.get(a, 1) for a in batch_axes)
+            if dp > 1 and scfg.slots % dp != 0:
+                raise ValueError(
+                    f"slots={scfg.slots} must be a multiple of the rules' "
+                    f"batch span {dp} on this mesh so slots map onto "
+                    f"mesh shards")
         self.cache = lm.init_cache(cfg, scfg.slots, scfg.max_len)
         self.lengths = jnp.zeros((scfg.slots,), jnp.int32)
         self.last_token = jnp.zeros((scfg.slots,), jnp.int32)
@@ -61,7 +90,6 @@ class ServingEngine:
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._rng = jax.random.PRNGKey(scfg.seed)
-        self._stochastic_substrate = cfg.sc_backend != "exact"
         self._decode = jax.jit(partial(lm.decode_step, cfg=cfg))
         self._prefill = jax.jit(
             partial(lm.prefill, cfg=cfg, max_len=scfg.max_len))
@@ -69,6 +97,14 @@ class ServingEngine:
         if collect_arch_trace and cfg.sc_backend == "array":
             from repro import arch
             self.arch_collector = arch.TraceCollector().install()
+
+    def _substrate_scope(self):
+        """Mesh scope entered around prefill/decode so their TRACING (the
+        first call per shape) routes dense() through sc_dot_sharded."""
+        if self.mesh is not None and self._stochastic_substrate:
+            from repro import sc
+            return sc.use_mesh(self.mesh, self.shard_rules)
+        return contextlib.nullcontext()
 
     def arch_report(self):
         """Aggregate arch cost of everything compiled so far (None when
@@ -114,11 +150,13 @@ class ServingEngine:
             if self.active[slot] is None and self.queue:
                 req = self.queue.pop(0)
                 prompt = jnp.asarray([req.prompt], jnp.int32)
-                if self._stochastic_substrate:
-                    logits, cache1, lens = self._prefill(
-                        self.params, prompt, rng=self._next_key())
-                else:
-                    logits, cache1, lens = self._prefill(self.params, prompt)
+                with self._substrate_scope():
+                    if self._stochastic_substrate:
+                        logits, cache1, lens = self._prefill(
+                            self.params, prompt, rng=self._next_key())
+                    else:
+                        logits, cache1, lens = self._prefill(
+                            self.params, prompt)
                 tok = self._sample(logits, req.temperature)
                 req.generated.append(int(tok[0]))
                 self.active[slot] = req
@@ -153,13 +191,14 @@ class ServingEngine:
         self._admit()
         if not any(r is not None for r in self.active):
             return False
-        if self._stochastic_substrate:
-            logits, self.cache = self._decode(
-                self.params, self.cache, self.last_token, self.lengths,
-                rng=self._next_key())
-        else:
-            logits, self.cache = self._decode(
-                self.params, self.cache, self.last_token, self.lengths)
+        with self._substrate_scope():
+            if self._stochastic_substrate:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, self.last_token, self.lengths,
+                    rng=self._next_key())
+            else:
+                logits, self.cache = self._decode(
+                    self.params, self.cache, self.last_token, self.lengths)
         self.lengths = self.lengths + jnp.asarray(
             [1 if r is not None else 0 for r in self.active], jnp.int32)
         toks = self._sample_slots(

@@ -1,2 +1,3 @@
 from repro.sharding.rules import (  # noqa: F401
-    ACT_RULES, PARAM_RULES, act_spec, logical_rules, param_partition_specs)
+    ACT_RULES, PARAM_RULES, act_spec, logical_rules, param_partition_specs,
+    sc_shard_rules)

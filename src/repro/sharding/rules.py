@@ -87,6 +87,25 @@ def param_shardings(specs, mesh):
         param_partition_specs(specs, mesh))
 
 
+def sc_shard_rules(mesh, *, batch=None, contract=None):
+    """SC-substrate sharding rules adapted to ``mesh``.
+
+    The SC contraction splits along the same logical axes the activation
+    rules use: rows (flattened batch·seq) over the DP axes
+    (``("pod", "data")``), contraction over the TP axis (``"model"``) with
+    a psum merge.  Axes absent from the mesh are dropped here; size-1 and
+    indivisible axes degrade per-call inside ``sc_dot_sharded``.
+    """
+    from repro.sc.sharded import DEFAULT_RULES, ScShardRules
+    sizes = dict(mesh.shape)
+    batch = tuple(batch if batch is not None else DEFAULT_RULES.batch)
+    contract = tuple(contract if contract is not None
+                     else DEFAULT_RULES.contract)
+    return ScShardRules(
+        batch=tuple(a for a in batch if a in sizes),
+        contract=tuple(a for a in contract if a in sizes))
+
+
 def act_spec(mesh, *axes) -> PartitionSpec:
     """PartitionSpec for an activation from logical axis names."""
     rules = logical_rules(mesh, "act")

@@ -1,0 +1,135 @@
+"""Multi-device checks for the mesh-sharded SC substrate.
+
+Run by tests/test_sc_sharded.py in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process must keep seeing the single real CPU device — see conftest.py).
+Everything rides one interpreter so the jax startup cost is paid once.
+Prints ``ALL-SHARDED-OK`` as the success sentinel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import arch, sc
+
+assert len(jax.devices()) == 8, jax.devices()
+
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+w = jax.random.normal(jax.random.PRNGKey(2), (32, 6))
+exact = np.asarray(x @ w)
+
+mesh24 = jax.make_mesh((2, 4), ("data", "model"))
+mesh18 = jax.make_mesh((1, 8), ("data", "model"))
+mesh81 = jax.make_mesh((8, 1), ("data", "model"))
+
+# --- identical keys => identical bits when no axis actually splits -------
+# On a 1x8 mesh with rules naming only the (size-1) data axis, resolve_rules
+# drops everything and the sharded entry point must reproduce single-device
+# sc_dot bit-for-bit with the same key.
+trivial = sc.ScShardRules(batch=("data",), contract=())
+for backend in ("moment", "bitexact"):
+    cfg = sc.ScConfig(backend=backend, nbit=512)
+    y_ref = sc.sc_dot(key, x, w, cfg)
+    y_sh = sc.sc_dot_sharded(key, x, w, cfg, mesh=mesh18, rules=trivial)
+    np.testing.assert_array_equal(np.asarray(y_ref), np.asarray(y_sh),
+                                  err_msg=f"{backend}: 1xN trivial mesh")
+
+# --- moment backend matches the contraction to tolerance on every mesh ---
+cfg_m = sc.ScConfig(backend="moment", nbit=1 << 16)
+for mesh in (mesh24, mesh18, mesh81):
+    y = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_m, mesh=mesh))
+    # noise std per output ~ scale_x*scale_w*sqrt(K p(1-p))/sqrt(nbit)
+    assert np.max(np.abs(y - exact)) < 0.5, (dict(mesh.shape),
+                                             np.max(np.abs(y - exact)))
+    # deterministic given (key, mesh, rules)
+    y2 = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_m, mesh=mesh))
+    np.testing.assert_array_equal(y, y2)
+
+# --- bitexact: reproducible bits, unbiased contraction -------------------
+cfg_b = sc.ScConfig(backend="bitexact", nbit=4096)
+yb = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_b, mesh=mesh24))
+yb2 = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_b, mesh=mesh24))
+np.testing.assert_array_equal(yb, yb2)
+assert np.max(np.abs(yb - exact)) < 1.0
+
+# --- STE gradients ride through the psum merge ---------------------------
+def loss(x, w):
+    return sc.sc_dot_sharded(key, x, w, cfg_m, mesh=mesh24).sum()
+
+gx, gw = jax.grad(loss, (0, 1))(x, w)
+g = jnp.ones(exact.shape)
+np.testing.assert_allclose(np.asarray(gx), np.asarray(g @ w.T),
+                           rtol=1e-5, atol=1e-5)
+np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ g),
+                           rtol=1e-5, atol=1e-5)
+
+# ... and under jit, exactly like the model stack runs it
+gx_j = jax.jit(jax.grad(loss))(x, w)
+np.testing.assert_allclose(np.asarray(gx_j), np.asarray(gx),
+                           rtol=1e-6, atol=1e-6)
+
+# --- array backend: per-shard records merge as concurrent banks ----------
+xa = jax.random.normal(jax.random.PRNGKey(3), (32, 256))
+wa = jax.random.normal(jax.random.PRNGKey(4), (256, 64))
+cfg_a = sc.ScConfig(backend="array", nbit=1024)
+with arch.collect() as recs_single:
+    sc.sc_dot(key, xa, wa, cfg_a)
+with arch.collect() as recs_shard:
+    sc.sc_dot_sharded(key, xa, wa, cfg_a, mesh=mesh24)
+(single,) = recs_single
+(shard,) = recs_shard
+assert shard.shards == 8, shard.shards
+assert shard.shape == (16, 64, 64), shard.shape
+merged = shard.effective_report
+assert merged.cycles < single.report.cycles, \
+    (merged.cycles, single.report.cycles)
+assert merged.products == single.report.products
+assert abs(merged.energy_pj - single.report.energy_pj) \
+    < 1e-6 * single.report.energy_pj
+
+# --- serve engine: slots map to shards, per-slot temperatures intact -----
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import lm, params as params_lib
+from repro.serve import Request, ServeConfig, ServingEngine
+from repro.sharding import sc_shard_rules
+
+cfg = get_smoke_config("paper-sc").replace(
+    param_dtype=jnp.float32, act_dtype=jnp.float32,
+    sc_backend="moment", sc_nbit=4096)
+params = params_lib.init_params(
+    jax.random.PRNGKey(0), lm.lm_param_specs(cfg), cfg.param_dtype)
+mesh = make_local_mesh(2)                       # (data=4, model=2)
+
+def run_engine(seed):
+    eng = ServingEngine(params, cfg,
+                        ServeConfig(slots=4, max_len=64, seed=seed),
+                        mesh=mesh, shard_rules=sc_shard_rules(mesh))
+    for rid, t in enumerate([0.0, 0.9, 0.0]):
+        eng.submit(Request(rid=rid, prompt=[5, 6, 7, 8],
+                           max_new_tokens=3, temperature=t))
+    fin = eng.run_until_drained()
+    return {r.rid: list(r.generated) for r in fin}
+
+g_a = run_engine(seed=0)
+g_b = run_engine(seed=0)
+assert g_a == g_b, "same seed must reproduce on the mesh"
+g_c = run_engine(seed=7)
+# greedy slots ignore the engine rng entirely at the sampling step; the
+# sampled slot (rid=1) re-draws. (The substrate rng changes with the seed
+# too, so only the sampling invariance is asserted: greedy outputs depend
+# solely on logits, which the new seed perturbs within the moment noise.)
+assert len(g_c) == 3 and all(len(v) == 3 for v in g_c.values())
+
+# slot grid must align with the data span
+try:
+    ServingEngine(params, cfg, ServeConfig(slots=3, max_len=64),
+                  mesh=mesh, shard_rules=sc_shard_rules(mesh))
+except ValueError:
+    pass
+else:
+    raise AssertionError("slots=3 on a data=4 mesh must be rejected")
+
+print("ALL-SHARDED-OK")

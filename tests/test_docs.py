@@ -1,0 +1,31 @@
+"""Docs stay navigable: every relative markdown link in README + docs/
+resolves. (Snippet EXECUTION is the CI docs job — tools/check_docs.py
+without --links-only — kept out of tier-1 to avoid re-importing jax under
+a forced 8-device platform here.)"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_docs
+
+
+def test_doc_files_exist():
+    for relpath in check_docs.LINK_FILES:
+        assert os.path.exists(os.path.join(check_docs.REPO, relpath)), relpath
+
+
+def test_markdown_links_resolve():
+    errors = []
+    for relpath in check_docs.LINK_FILES:
+        errors += check_docs.check_links(relpath)
+    assert not errors, "\n".join(errors)
+
+
+def test_snippet_extraction_finds_python_blocks():
+    for relpath in check_docs.SNIPPET_FILES:
+        snippets = check_docs.extract_snippets(relpath)
+        assert snippets, f"{relpath}: no python snippets found"
+        for _, src in snippets:
+            compile(src, relpath, "exec")     # syntax-checks every block

@@ -1,0 +1,124 @@
+"""Docs checker: markdown links resolve, and the code snippets embedded in
+docs/backends.md / docs/scaling.md actually run against the installed
+package.
+
+    PYTHONPATH=src python tools/check_docs.py            # links + snippets
+    PYTHONPATH=src python tools/check_docs.py --links-only
+
+Snippets run in-process with a forced 8-device host platform (the scaling
+guide shards over a (2, 4) mesh), so XLA_FLAGS is set before any snippet
+gets a chance to import jax. Each file's ``python`` fenced blocks execute
+in ONE shared namespace, top to bottom — the docs read as a session, and
+they are checked as one.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+# Files whose links are checked.
+LINK_FILES = ["README.md", "docs/paper_map.md", "docs/backends.md",
+              "docs/scaling.md"]
+# Files whose ```python blocks are executed.
+SNIPPET_FILES = ["docs/backends.md", "docs/scaling.md"]
+
+
+def check_links(relpath: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.join(REPO, relpath))
+    with open(os.path.join(REPO, relpath)) as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:          # pure in-page anchor
+                    continue
+                if not os.path.exists(os.path.normpath(
+                        os.path.join(base, path))):
+                    errors.append(f"{relpath}:{lineno}: broken link "
+                                  f"-> {target}")
+    return errors
+
+
+def extract_snippets(relpath: str) -> list[tuple[int, str]]:
+    """(first line number, source) of every ```python fenced block."""
+    snippets = []
+    lang, buf, start = None, [], 0
+    with open(os.path.join(REPO, relpath)) as f:
+        for lineno, line in enumerate(f, 1):
+            m = FENCE_RE.match(line)
+            if m and lang is None:
+                lang, buf, start = m.group(1) or "text", [], lineno + 1
+            elif m:
+                if lang == "python":
+                    snippets.append((start, "".join(buf)))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    return snippets
+
+
+def run_snippets(relpath: str) -> list[str]:
+    namespace: dict = {"__name__": f"docs_snippet:{relpath}"}
+    for start, src in extract_snippets(relpath):
+        label = f"{relpath}:{start}"
+        print(f"  running snippet {label} ({len(src.splitlines())} lines)")
+        try:
+            code = compile(src, label, "exec")
+            exec(code, namespace)        # noqa: S102 — the point of the job
+        except Exception as e:           # noqa: BLE001 — report, don't die
+            return [f"{label}: snippet failed: {type(e).__name__}: {e}"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing the embedded code snippets")
+    args = ap.parse_args(argv)
+
+    if not args.links_only:
+        # Must precede any jax import (snippets import jax themselves; the
+        # scaling guide shards over a (2, 4) mesh). Set here — NOT at
+        # module import — so importing this module (tests/test_docs.py)
+        # leaks nothing into the importer's environment.
+        os.environ.setdefault("XLA_FLAGS",
+                              "--xla_force_host_platform_device_count=8")
+        if "jax" in sys.modules:
+            import jax
+            if len(jax.devices()) < 8:
+                print("ERROR: jax already initialized with "
+                      f"{len(jax.devices())} devices; run check_docs in a "
+                      "fresh process (snippets need 8)", file=sys.stderr)
+                return 1
+
+    errors: list[str] = []
+    for relpath in LINK_FILES:
+        if not os.path.exists(os.path.join(REPO, relpath)):
+            errors.append(f"missing doc file: {relpath}")
+            continue
+        errors += check_links(relpath)
+    print(f"checked links in {len(LINK_FILES)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken'}")
+
+    if not args.links_only and not errors:
+        for relpath in SNIPPET_FILES:
+            print(f"executing snippets from {relpath}")
+            errors += run_snippets(relpath)
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
