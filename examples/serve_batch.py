@@ -7,6 +7,8 @@ SC substrate registry, any backend).
     PYTHONPATH=src python examples/serve_batch.py --sc            # SC decode
     PYTHONPATH=src python examples/serve_batch.py --sc \
         --sc-backend pallas_moment                    # fused Pallas kernel
+    PYTHONPATH=src python examples/serve_batch.py --paged \
+        --block-size 8 --max-blocks 48      # paged KV + chunked prefill
 """
 
 from __future__ import annotations
@@ -19,7 +21,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import lm, params as params_lib
-from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve import (PagedServeConfig, PagedServingEngine, Request,
+                         ServeConfig, ServingEngine)
 
 
 def main():
@@ -35,6 +38,16 @@ def main():
     ap.add_argument("--sc-backend", default=None,
                     help="any backend registered in repro.sc (implies --sc; "
                          "default: moment)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged continuous-batching "
+                         "engine (block-pool KV + chunked prefill)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (--paged)")
+    ap.add_argument("--max-blocks", type=int, default=0,
+                    help="KV pool size in blocks (--paged; 0 = sized for "
+                         "slots x max_len — shrink it to watch evictions)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens fed per row per tick (--paged)")
     args = ap.parse_args()
     if args.sc_backend:
         args.sc = True
@@ -50,8 +63,14 @@ def main():
     key = jax.random.PRNGKey(0)
     params = params_lib.init_params(key, lm.lm_param_specs(cfg),
                                     cfg.param_dtype)
-    engine = ServingEngine(params, cfg, ServeConfig(
-        slots=args.slots, max_len=args.max_len))
+    if args.paged:
+        engine = PagedServingEngine(params, cfg, PagedServeConfig(
+            slots=args.slots, max_len=args.max_len,
+            block_size=args.block_size, num_blocks=args.max_blocks,
+            prefill_chunk=args.prefill_chunk))
+    else:
+        engine = ServingEngine(params, cfg, ServeConfig(
+            slots=args.slots, max_len=args.max_len))
 
     rng = jax.random.PRNGKey(1)
     for rid in range(args.requests):
@@ -62,8 +81,9 @@ def main():
                               max_new_tokens=args.max_new,
                               temperature=args.temperature))
 
+    mode = "paged" if args.paged else "fixed-slot"
     print(f"serving {args.requests} requests on {args.slots} slots "
-          f"(continuous batching), sc={'on' if args.sc else 'off'}")
+          f"({mode} continuous batching), sc={'on' if args.sc else 'off'}")
     t0 = time.time()
     ticks = 0
     while engine.queue or any(engine.active):
@@ -78,6 +98,9 @@ def main():
     print(f"\nserved {len(engine.finished)} requests / {total} tokens in "
           f"{dt:.1f}s = {total / dt:.1f} tok/s "
           f"({ticks} engine ticks, batched decode)")
+    if args.paged:
+        print(f"  {engine.evictions} evictions; "
+              f"{engine.kv.pool.free_blocks} blocks free at drain")
     for r in engine.finished[:3]:
         print(f"  req {r.rid}: {len(r.prompt)}-token prompt -> "
               f"{r.generated[:10]}{'...' if len(r.generated) > 10 else ''}")

@@ -67,10 +67,47 @@ class CallRecord:
 
 
 class TraceCollector:
-    """Accumulates CallRecords from every array-backend dispatch in scope."""
+    """Accumulates CallRecords from every array-backend dispatch in scope.
+
+    Serving engines additionally stamp per-request token counts
+    (:meth:`note_request`) so :meth:`cost_per_request` can prorate the
+    aggregate trace cost across a mixed-traffic batch — the records
+    themselves are per compiled SHAPE (jit caching), so tokens are the
+    only per-request signal available at this layer.
+    """
 
     def __init__(self):
         self.records: list[CallRecord] = []
+        self.request_tokens: dict = {}      # request id -> context tokens
+
+    def note_request(self, rid, tokens: int) -> None:
+        """Stamp a finished request's total token count (prompt +
+        generated).  Re-stamping the same id overwrites."""
+        self.request_tokens[rid] = int(tokens)
+
+    def cost_per_request(self) -> dict:
+        """Prorate the aggregate trace cost over the stamped requests.
+
+        Returns ``{rid: {"tokens", "share", "cycles", "energy_pj"}}`` —
+        each request charged the aggregate cycles/energy in proportion to
+        its token count.  Proportional attribution is the honest choice
+        here: records are per compiled shape, not per executed tick, so
+        token counts are the per-request quantity the engine actually
+        knows."""
+        total = sum(self.request_tokens.values())
+        if not total:
+            return {}
+        agg = self.aggregate()
+        out = {}
+        for rid, tokens in sorted(self.request_tokens.items()):
+            share = tokens / total
+            out[rid] = {
+                "tokens": tokens,
+                "share": round(share, 6),
+                "cycles": round(agg.cycles * share, 1),
+                "energy_pj": round(agg.energy_pj * share, 3),
+            }
+        return out
 
     def install(self) -> "TraceCollector":
         if self not in _LISTENERS:
@@ -83,6 +120,7 @@ class TraceCollector:
 
     def clear(self) -> None:
         self.records.clear()
+        self.request_tokens.clear()
 
     def aggregate(self) -> accounting.TraceReport:
         """Serial merge over recorded calls, each first merged across its

@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
         --requests 8 --slots 4
+    PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
+        --block-size 8 --max-blocks 64          # paged KV + chunked prefill
 """
 
 from __future__ import annotations
@@ -15,7 +17,8 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import lm, params as params_lib
-from repro.serve import Request, ServeConfig, ServingEngine
+from repro.serve import (PagedServeConfig, PagedServingEngine, Request,
+                         ServeConfig, ServingEngine)
 from repro.sharding import sc_shard_rules
 
 
@@ -32,10 +35,25 @@ def main(argv=None):
     ap.add_argument("--mesh", action="store_true",
                     help="shard the SC substrate over a local device mesh "
                          "(slots map to data shards; needs a stochastic "
-                         "--arch sc_backend)")
+                         "--arch sc_backend; fixed-slot engine only)")
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="model axis size of the local mesh (--mesh)")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged continuous-batching "
+                         "engine (block-pool KV cache + chunked prefill + "
+                         "eviction-on-OOM; attention-family archs)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (--paged)")
+    ap.add_argument("--max-blocks", type=int, default=0,
+                    help="pool size in blocks incl. the null block "
+                         "(--paged; 0 = size for slots x max_len)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens fed per row per tick (--paged)")
     args = ap.parse_args(argv)
+    if args.paged and args.mesh:
+        raise SystemExit("--paged and --mesh are mutually exclusive (the "
+                         "paged engine is single-mesh-slice; see "
+                         "docs/serving.md)")
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
@@ -51,9 +69,18 @@ def main(argv=None):
         mesh = make_local_mesh(args.model_parallel)
         rules = sc_shard_rules(mesh)
         print(f"serving on mesh {dict(mesh.shape)}")
-    engine = ServingEngine(params, cfg, ServeConfig(
-        slots=args.slots, max_len=args.max_len, seed=args.seed),
-        mesh=mesh, shard_rules=rules)
+    if args.paged:
+        engine = PagedServingEngine(params, cfg, PagedServeConfig(
+            slots=args.slots, max_len=args.max_len, seed=args.seed,
+            block_size=args.block_size, num_blocks=args.max_blocks,
+            prefill_chunk=args.prefill_chunk))
+        print(f"paged engine: block_size={args.block_size} "
+              f"pool={engine.kv.cfg.num_blocks} blocks "
+              f"(chunked prefill {args.prefill_chunk})")
+    else:
+        engine = ServingEngine(params, cfg, ServeConfig(
+            slots=args.slots, max_len=args.max_len, seed=args.seed),
+            mesh=mesh, shard_rules=rules)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     for rid in range(args.requests):
@@ -70,6 +97,9 @@ def main(argv=None):
     total_tokens = sum(len(r.generated) for r in finished)
     print(f"served {len(finished)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/max(dt,1e-9):.1f} tok/s)")
+    if args.paged:
+        print(f"  {engine.ticks} ticks, {engine.evictions} evictions, "
+              f"{engine.kv.pool.free_blocks} blocks free at drain")
     for r in finished[:4]:
         print(f"  req {r.rid}: prompt[:6]={r.prompt[:6]} "
               f"generated={r.generated}")

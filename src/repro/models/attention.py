@@ -44,7 +44,15 @@ def attn_specs(cfg):
 def _project_qkv(x, p, cfg, positions, key=None):
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    keys = [None] * 3 if key is None else list(jax.random.split(key, 3))
+    if key is None:
+        keys = [None] * 3
+    elif key.ndim > 1:
+        # Per-token key arrays (paged/chunked decode): one fold per
+        # projection instead of a split, so each token's draw stays a
+        # function of its own (request, position) key alone.
+        keys = [layers.fold_keys(key, 23 + j) for j in range(3)]
+    else:
+        keys = list(jax.random.split(key, 3))
     q = layers.dense(x, p["wq"], cfg, keys[0], p.get("bq")).reshape(b, s, h, hd)
     k = layers.dense(x, p["wk"], cfg, keys[1], p.get("bk")).reshape(b, s, kv, hd)
     v = layers.dense(x, p["wv"], cfg, keys[2], p.get("bv")).reshape(b, s, kv, hd)
@@ -163,19 +171,101 @@ def blockwise_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
 
 
 def decode_attention(q, k_cache, v_cache, length):
-    """One-token decode: q (b,1,h,d) against cache (b,L,kv,d); mask > length."""
-    b, _, h, hd = q.shape
+    """One-token decode: q (b,1,h,d) against cache (b,L,kv,d); mask > length.
+    The single-token special case of :func:`chunk_decode_attention` (the
+    query sits at position ``length - 1``, i.e. a chunk of one at fill
+    ``length - 1``)."""
+    return chunk_decode_attention(q, k_cache, v_cache, length - 1)
+
+
+def chunk_decode_attention(q, k_cache, v_cache, lengths):
+    """Multi-token decode: a chunk of queries against a per-sequence cache.
+
+    q: (b, sc, h, d) — chunk token i of row r sits at ABSOLUTE position
+    ``lengths[r] + i`` (its K/V must already be written into the cache);
+    k/v_cache: (b, L, kv, d).  Causal within the chunk, masked beyond each
+    row's fill.  ``sc = 1`` reproduces :func:`decode_attention` with
+    ``length = lengths + 1`` — the single-token decode is the special case.
+    This is the lookup the paged serve path drives after a
+    ``paged_gather``; it is also what chunked prefill uses, which is why
+    one function serves both phases.
+    """
+    b, sc, h, hd = q.shape
     kv = k_cache.shape[2]
-    qg = _grouped(q, kv).astype(jnp.float32)
+    qg = _grouped(q, kv).astype(jnp.float32)              # (b,sc,kv,g,d)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     logits = jnp.einsum("bskgd,btkd->bkgst", qg,
                         k_cache.astype(jnp.float32)) * scale
-    idx = jnp.arange(k_cache.shape[1])
-    mask = idx[None, :] < length[:, None]                 # (b, L)
-    logits = jnp.where(mask[:, None, None, None], logits, NEG_INF)
+    t_idx = jnp.arange(k_cache.shape[1])                  # (L,)
+    q_pos = lengths[:, None] + jnp.arange(sc)[None, :]    # (b, sc)
+    mask = t_idx[None, None, :] <= q_pos[:, :, None]      # (b, sc, L)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache.astype(jnp.float32))
-    return out.reshape(b, 1, h, hd).astype(q.dtype)
+    return out.reshape(b, sc, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV lookup: fixed-size token blocks + per-sequence block tables
+# ---------------------------------------------------------------------------
+
+
+def paged_gather(pages, block_table):
+    """Materialize each sequence's cache view from the block pool.
+
+    pages: (P, bs, kv, d) — the pool (P blocks of bs tokens, one layer);
+    block_table: (b, nb) int32 — block ids per sequence, position t of row
+    r lives in ``pages[block_table[r, t // bs], t % bs]``.  Returns the
+    gathered (b, nb·bs, kv, d) view — the contiguous-cache layout, which
+    is what proves paged == contiguous attention (same downstream math).
+    """
+    g = jnp.take(pages, block_table, axis=0)              # (b, nb, bs, kv, d)
+    b, nb, bs = g.shape[:3]
+    return g.reshape(b, nb * bs, *g.shape[3:])
+
+
+def paged_scatter(pages, block_table, new, lengths, n_valid):
+    """Write a chunk's K or V rows into the pool through the block tables.
+
+    new: (b, sc, kv, d) — token i of row r goes to absolute position
+    ``lengths[r] + i`` when ``i < n_valid[r]``; tokens beyond a row's
+    valid count (chunk padding, idle rows) land in the reserved null
+    block 0, which no live sequence ever maps.  Rows' block tables point
+    at disjoint pool blocks (the allocator's invariant), so scatters
+    never collide except harmlessly inside the null block.
+    """
+    bs = pages.shape[1]
+    b, sc = new.shape[:2]
+    nb = block_table.shape[1]
+    i = jnp.arange(sc)[None, :]
+    t = jnp.clip(lengths[:, None] + i, 0, nb * bs - 1)    # (b, sc)
+    valid = i < n_valid[:, None]
+    page = jnp.take_along_axis(block_table, t // bs, axis=1)
+    page = jnp.where(valid, page, 0)
+    off = jnp.where(valid, t % bs, 0)
+    flat = new.reshape(b * sc, *new.shape[2:]).astype(pages.dtype)
+    return pages.at[page.reshape(-1), off.reshape(-1)].set(flat)
+
+
+def paged_attention_block(x, p, cfg, positions, key, k_pages, v_pages,
+                          block_table, lengths, n_valid):
+    """Self-attention over the paged KV cache (chunked decode/prefill).
+
+    x: (b, sc, d) chunk activations; the chunk's K/V scatter into the
+    pool first, then attention runs over each row's gathered view —
+    write-then-gather keeps the math identical to the contiguous path.
+    Returns (out, new_k_pages, new_v_pages).
+    """
+    q, k, v = _project_qkv(x, p, cfg, positions, key)
+    k_pages = paged_scatter(k_pages, block_table, k, lengths, n_valid)
+    v_pages = paged_scatter(v_pages, block_table, v, lengths, n_valid)
+    kc = paged_gather(k_pages, block_table)
+    vc = paged_gather(v_pages, block_table)
+    out = chunk_decode_attention(q, kc, vc, lengths)
+    b, s, _, _ = out.shape
+    okey = layers.fold_keys(key, 7)
+    return (layers.dense(out.reshape(b, s, -1), p["wo"], cfg, okey),
+            k_pages, v_pages)
 
 
 def attention_block(x, p, cfg, positions, key=None, *, cache=None,

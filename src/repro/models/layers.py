@@ -23,18 +23,59 @@ def rms_norm(x, weight, eps: float = 1e-6):
     return (x * jax.lax.rsqrt(var + eps)).astype(dt) * weight
 
 
+def fold_keys(key, data):
+    """``jax.random.fold_in`` broadcast over an array of raw PRNG keys.
+
+    ``key`` may be None (passed through), one raw uint32 key of shape (2,),
+    or an array of keys with leading batch dims, shape (..., 2).  ``data``
+    is an int (same fold for every key) or an int array matching the
+    leading dims (per-key fold — e.g. per-token positions).
+    """
+    if key is None:
+        return None
+    if key.ndim == 1:
+        return jax.random.fold_in(key, data)
+    flat = key.reshape(-1, key.shape[-1])
+    data = jnp.broadcast_to(jnp.asarray(data, jnp.uint32), key.shape[:-1])
+    folded = jax.vmap(jax.random.fold_in)(flat, data.reshape(-1))
+    return folded.reshape(key.shape)
+
+
+def _dense_rows(keys, x, w, sc_cfg):
+    """Per-row SC dispatch: row i of ``x`` draws its stochastic bits (and
+    its max-abs encoding scale) from ``keys[i]`` ALONE, so each row's
+    output is independent of its batch neighbours — the property the
+    continuous-batching serve engine relies on (same request + same key
+    => same values whatever shares the batch)."""
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    kf = keys.reshape(-1, keys.shape[-1])
+    w32 = w.astype(jnp.float32)
+    yf = jax.vmap(lambda k, xr: sc.sc_dot(k, xr, w32, sc_cfg))(kf, xf)
+    return yf.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
 def dense(x, w, cfg, key=None, bias=None):
     """x @ w with the configured multiplication substrate.
 
     x: (..., K); w: (K, N) (or pre-reshaped 2-D view of a fused projection).
-    SC modes need a PRNG key; exact mode ignores it.  Inside a
-    ``sc.use_mesh(mesh)`` scope stochastic matmuls shard over the mesh via
-    ``sc_dot_sharded`` (rows over the data axes, contraction over model
-    with a psum merge) — the scope is consulted at trace time, so callers
-    scale across devices with no signature changes.
+    SC modes need a PRNG key; exact mode ignores it.  ``key`` may also be
+    an ARRAY of raw keys whose leading dims match ``x``'s (one key per
+    row): the stochastic draw then vmaps per row, making every row's
+    output (noise AND encoding scale) a function of its own key and data
+    only — what the paged serve engine passes so results are invariant to
+    batch composition.  Inside a ``sc.use_mesh(mesh)`` scope stochastic
+    matmuls shard over the mesh via ``sc_dot_sharded`` (rows over the data
+    axes, contraction over model with a psum merge) — the scope is
+    consulted at trace time, so callers scale across devices with no
+    signature changes (per-row keys are a single-mesh-slice feature and
+    take precedence when both apply).
     """
     if cfg.sc_backend == "exact" or key is None:
         y = jnp.dot(x, w.astype(x.dtype))
+    elif key.ndim > 1:
+        sc_cfg = sc.ScConfig(backend=cfg.sc_backend, nbit=cfg.sc_nbit)
+        y = _dense_rows(key, x, w, sc_cfg)
     else:
         sc_cfg = sc.ScConfig(backend=cfg.sc_backend, nbit=cfg.sc_nbit)
         scope = sc.active_mesh()
@@ -77,8 +118,7 @@ def mlp(x, p, cfg, key=None, constrain=None):
     else:
         act = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
     act = cst(act, "batch", "seq", "mlp")
-    k2 = None if key is None else jax.random.fold_in(key, 1)
-    return dense(act, p["wo"], cfg, k2)
+    return dense(act, p["wo"], cfg, fold_keys(key, 1))
 
 
 # ----------------------------- RoPE -----------------------------------------

@@ -265,6 +265,84 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
             "v": jnp.zeros((n, batch, max_len, kvh, hd), dtype)}
 
 
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
+    """Paged decode cache: one pool of ``num_blocks`` fixed-size token
+    blocks per layer, addressed through per-sequence block tables
+    (``serve/kv_cache.py`` owns the allocator; block 0 is the reserved
+    null block padding writes land in).  Attention families only — SSM
+    state is O(1) per sequence and has nothing to page."""
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError(
+            f"paged KV cache needs an attention-family config, got "
+            f"family={cfg.family!r} (ssm state is fixed-size; use the "
+            "contiguous engine)")
+    dtype = dtype or cfg.act_dtype
+    n = n_backbone_layers(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((n, num_blocks, block_size, kvh, hd), dtype),
+            "v": jnp.zeros((n, num_blocks, block_size, kvh, hd), dtype)}
+
+
+def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
+                 *, rng=None):
+    """One chunked step over the paged KV cache — decode AND prefill.
+
+    tokens: (b, sc) — row r feeds its next ``n_valid[r]`` context tokens
+    (decode ticks feed 1; chunked prefill feeds up to sc); positions are
+    absolute: token i of row r sits at ``lengths[r] + i``.  Slots beyond
+    a row's valid count (chunk padding, idle rows) write their K/V to the
+    null block and are masked out of every live query.  Returns
+    ``(logits, new_pages)`` with logits (b, vocab) taken at each row's
+    LAST VALID position — the next-token distribution once the row's
+    pending context is consumed.
+
+    RNG contract (what makes continuous batching testable): ``rng`` is a
+    (b, 2) array of per-request raw keys.  Inside, every token folds its
+    row's key with its ABSOLUTE position, and all layer/call-site folds
+    derive from that — so the stochastic bits a token draws depend only on
+    (request key, position, layer, call site), never on batch neighbours,
+    chunk boundaries, or admission order.  The same request with the same
+    key therefore produces identical values served alone, in a full
+    batch, or re-prefilled after an eviction.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise ValueError("decode_paged supports attention-family configs "
+                         f"only, got family={cfg.family!r}")
+    b, sc = tokens.shape
+    x = layers.embed(tokens, params["embed"]).astype(cfg.act_dtype)
+    positions = lengths[:, None] + jnp.arange(sc)[None, :]      # (b, sc)
+    keys = None
+    if rng is not None:
+        per_tok = jnp.broadcast_to(rng[:, None, :], (b, sc, rng.shape[-1]))
+        keys = layers.fold_keys(per_tok, positions)             # (b, sc, 2)
+
+    def body(carry, scanned):
+        xc, idx = carry
+        lp, kp, vp = scanned
+        lkeys = layers.fold_keys(keys, idx)
+        h, kp, vp = attention.paged_attention_block(
+            layers.rms_norm(xc, lp["ln1"]), lp["attn"], cfg, positions,
+            layers.fold_keys(lkeys, 11), kp, vp, block_table, lengths,
+            n_valid)
+        xc = xc + h
+        fkey = layers.fold_keys(lkeys, 13)
+        if cfg.family == "moe":
+            h = moe.moe_ffn(layers.rms_norm(xc, lp["ln2"]), lp["ffn"], cfg,
+                            fkey)
+        else:
+            h = layers.mlp(layers.rms_norm(xc, lp["ln2"]), lp["ffn"], cfg,
+                           fkey)
+        return (xc + h, idx + 1), (kp, vp)
+
+    (x, _), (k_new, v_new) = jax.lax.scan(
+        body, (x, 0), (params["blocks"], pages["k"], pages["v"]))
+    x = layers.rms_norm(x, params["final_norm"])
+    last = jnp.maximum(n_valid - 1, 0)
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = _logits(xl, params, cfg)
+    return logits, {"k": k_new, "v": v_new}
+
+
 # --------------------------------------------------------------------------
 # Decode (one token per sequence) — what `serve_step` lowers
 # --------------------------------------------------------------------------

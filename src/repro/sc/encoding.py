@@ -22,17 +22,27 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
+FX16_ONE = 1 << 16      # fixed-point unit of the packed-engine bias words
+
+
 def encode(v, cfg):
-    """float tensor -> (sign, probability, scale). p ∈ [0,1], v ≈ sign·p·scale.
+    """float tensor -> (sign, probability, scale). p ∈ [0,1), v ≈ sign·p·scale.
 
     ``cfg`` needs ``quantize`` and ``operand_bits`` (ScConfig or the legacy
     SCMacConfig both qualify).
+
+    The operand grid is the paper's n-bit LUT index space (§III-A): an
+    operand X ∈ [0, 2^n - 1] encodes probability X / 2^n, so the top
+    representable level is (2^n - 1)/2^n — index 2^n does not exist in the
+    table.  Probabilities therefore snap to ``round(p·2^n)`` *clamped* to
+    2^n - 1; the previous un-clamped round produced 2^n + 1 levels with
+    p = 1.0 landing on the nonexistent index 2^n.
     """
     scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30)
     p = jnp.abs(v) / scale
     if cfg.quantize:
         levels = 1 << cfg.operand_bits
-        p = jnp.round(p * levels) / levels   # n-bit operand grid (LUT input)
+        p = jnp.clip(jnp.round(p * levels), 0, levels - 1) / levels
     return jnp.sign(v), p, scale
 
 
@@ -42,8 +52,28 @@ def decode(sign, p, scale):
 
 
 def to_fx16(p):
-    """Probability in [0, 1] -> 16-bit fixed-point bias word (clamped)."""
-    return jnp.minimum(jnp.round(p * 65536.0), 65535.0).astype(jnp.uint32)
+    """Probability in [0, 1] -> 16-bit bias word w, Bernoulli bias w / 2^16.
+
+    Round-to-nearest, so the round-trip through :func:`from_fx16` is EXACT
+    on every operand grid of ``operand_bits <= 16``: a grid level
+    p = i / 2^n maps to w = i·2^(16-n) and back losslessly.  p = 1.0 itself
+    has no 16-bit word (w = 2^16 needs a 17th bit) and clamps to 65535;
+    :func:`encode`'s clamped grid keeps quantized probabilities at
+    (2^n - 1)/2^n or below, so the packed Pallas path never hits the clamp
+    and max-magnitude operands are no longer biased downward.
+    """
+    return jnp.clip(jnp.round(p * FX16_ONE), 0, FX16_ONE - 1).astype(
+        jnp.uint32)
+
+
+def from_fx16(w):
+    """Bias word -> the probability the packed engine realizes (w / 2^16).
+
+    This is exactly the per-bit probability of the Horner-ladder Bernoulli
+    synthesis in ``kernels/sc_mul.py``, so ``from_fx16(to_fx16(p))`` is the
+    bias the hardware path actually draws with.
+    """
+    return w.astype(jnp.float32) / FX16_ONE
 
 
 def pad_to(x, multiple, axis):

@@ -1,1 +1,6 @@
-from repro.serve.engine import Request, ServeConfig, ServingEngine  # noqa: F401
+from repro.serve.engine import (                          # noqa: F401
+    PagedServeConfig, PagedServingEngine, Request, ServeConfig,
+    ServingEngine)
+from repro.serve.kv_cache import (                        # noqa: F401
+    BlockPool, PagedCacheConfig, PagedKVCache, default_num_blocks)
+from repro.serve.scheduler import Scheduler, TickPlan     # noqa: F401

@@ -1,5 +1,17 @@
-"""Batched serving engine: continuous batching over a fixed slot grid.
+"""Batched serving engines.
 
+Two engines share this module (and the arch-trace lifecycle):
+
+* :class:`ServingEngine` — the original fixed-slot engine: contiguous
+  full-``max_len`` KV rows, batch=1 admission prefill, lock-step decode.
+  Still the only engine for SSM/hybrid archs and mesh-sharded serving,
+  and the baseline the serve benchmark measures against.
+* :class:`PagedServingEngine` — continuous batching over a block-pool
+  paged KV cache with chunked prefill, eviction-on-OOM, and per-request
+  rng (see its docstring and ``docs/serving.md``).
+
+Fixed-slot engine
+-----------------
 The engine owns a KV/SSM cache with ``slots`` batch rows. Each slot holds
 one in-flight request; when a request finishes (EOS or max tokens), the slot
 is immediately refilled from the queue — decode never stalls on stragglers
@@ -41,6 +53,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import lm
 
@@ -53,6 +66,11 @@ class Request:
     temperature: float = 0.0
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # Per-request rng key (raw (2,) uint32).  The paged engine folds it
+    # from the engine seed + rid at submission unless the caller set one;
+    # every stochastic draw for this request (SC bits, sampling) derives
+    # from it, making results independent of batch composition.
+    key: object = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,7 +81,94 @@ class ServeConfig:
     seed: int = 0
 
 
-class ServingEngine:
+@dataclasses.dataclass(frozen=True)
+class PagedServeConfig:
+    """Knobs of the paged continuous-batching engine.
+
+    ``num_blocks = 0`` sizes the pool to the fixed-slot engine's
+    reservation (every slot at full ``max_len``, plus the null block);
+    smaller pools trade memory for eviction pressure.  ``prefill_chunk``
+    caps how many prompt tokens one tick feeds per row (chunked prefill:
+    long prompts admit over several ticks instead of stalling the batch).
+    """
+
+    slots: int = 4
+    max_len: int = 256
+    eos_id: int = 2
+    seed: int = 0
+    block_size: int = 16
+    num_blocks: int = 0
+    prefill_chunk: int = 8
+
+
+class _ArchTracedEngine:
+    """Arch-trace collector lifecycle shared by both engines.
+
+    ``close()`` is IDEMPOTENT: the first call detaches the collector from
+    the global listener list; every later call (or ``__del__`` after an
+    explicit close, or a close racing engine teardown) is a no-op, so the
+    listener list can never be corrupted by double-uninstall.  Records
+    stay readable after close.  ``step()`` implementations wrap their
+    tick in ``_detach_on_error`` so a raise mid-tick also detaches —
+    a dead engine must not keep recording every later compilation in the
+    process.
+    """
+
+    def _init_arch(self, collect_arch_trace: bool, cfg) -> None:
+        self._arch_closed = False
+        self.arch_collector = None
+        if collect_arch_trace and cfg.sc_backend == "array":
+            from repro import arch
+            self.arch_collector = arch.TraceCollector().install()
+
+    def arch_report(self):
+        """Aggregate arch cost of everything compiled so far (None when
+        trace collection is off or nothing was recorded). NOTE: the
+        collector hears every array-backend dispatch in the process while
+        installed (same semantics as ``arch.collect()``), not only this
+        engine's — run one traced engine at a time for a clean bill."""
+        collector = getattr(self, "arch_collector", None)
+        if collector is None or not collector.records:
+            return None
+        return collector.aggregate()
+
+    def arch_request_costs(self):
+        """Per-request cost attribution under mixed traffic (None when no
+        trace or no finished requests were stamped): the aggregate trace
+        cost prorated by each request's token count — see
+        ``TraceCollector.cost_per_request``."""
+        collector = getattr(self, "arch_collector", None)
+        if collector is None or not collector.request_tokens:
+            return None
+        return collector.cost_per_request()
+
+    def close(self):
+        """Detach the arch trace collector (records stay readable).
+        Safe to call any number of times, from ``__del__``, or after a
+        mid-tick failure — only the first call touches the listener
+        list."""
+        if getattr(self, "_arch_closed", True):
+            return
+        self._arch_closed = True
+        collector = getattr(self, "arch_collector", None)
+        if collector is not None:
+            collector.uninstall()
+
+    def __del__(self):
+        # A dropped engine must not leave its collector in the global
+        # listener list (would leak records and keep tracing active).
+        self.close()
+
+    @contextlib.contextmanager
+    def _detach_on_error(self):
+        try:
+            yield
+        except Exception:
+            self.close()
+            raise
+
+
+class ServingEngine(_ArchTracedEngine):
     def __init__(self, params, cfg, scfg: ServeConfig,
                  collect_arch_trace: bool = False, mesh=None,
                  shard_rules=None):
@@ -93,10 +198,7 @@ class ServingEngine:
         self._decode = jax.jit(partial(lm.decode_step, cfg=cfg))
         self._prefill = jax.jit(
             partial(lm.prefill, cfg=cfg, max_len=scfg.max_len))
-        self.arch_collector = None
-        if collect_arch_trace and cfg.sc_backend == "array":
-            from repro import arch
-            self.arch_collector = arch.TraceCollector().install()
+        self._init_arch(collect_arch_trace, cfg)
 
     def _substrate_scope(self):
         """Mesh scope entered around prefill/decode so their TRACING (the
@@ -105,27 +207,6 @@ class ServingEngine:
             from repro import sc
             return sc.use_mesh(self.mesh, self.shard_rules)
         return contextlib.nullcontext()
-
-    def arch_report(self):
-        """Aggregate arch cost of everything compiled so far (None when
-        trace collection is off or nothing was recorded). NOTE: the
-        collector hears every array-backend dispatch in the process while
-        installed (same semantics as ``arch.collect()``), not only this
-        engine's — run one traced engine at a time for a clean bill."""
-        if self.arch_collector is None or not self.arch_collector.records:
-            return None
-        return self.arch_collector.aggregate()
-
-    def close(self):
-        """Detach the arch trace collector (records stay readable)."""
-        collector = getattr(self, "arch_collector", None)
-        if collector is not None:
-            collector.uninstall()
-
-    def __del__(self):
-        # A dropped engine must not leave its collector in the global
-        # listener list (would leak records and keep tracing active).
-        self.close()
 
     def _next_key(self):
         self._rng, k = jax.random.split(self._rng)
@@ -187,7 +268,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def step(self):
-        """One engine tick: admit, batched decode, per-slot sample, harvest."""
+        """One engine tick: admit, batched decode, per-slot sample, harvest.
+        A raise mid-tick detaches the arch collector before propagating."""
+        with self._detach_on_error():
+            return self._step()
+
+    def _step(self):
         self._admit()
         if not any(r is not None for r in self.active):
             return False
@@ -215,6 +301,9 @@ class ServingEngine:
             hit_cap = int(self.lengths[slot]) >= self.scfg.max_len - 1
             if hit_eos or hit_max or hit_cap:
                 req.done = True
+                if self.arch_collector is not None:
+                    self.arch_collector.note_request(
+                        req.rid, len(req.prompt) + len(req.generated))
                 self.finished.append(req)
                 self.active[slot] = None
                 self.lengths = self.lengths.at[slot].set(0)
@@ -226,3 +315,153 @@ class ServingEngine:
             self.step()
             ticks += 1
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Paged continuous-batching engine
+# ---------------------------------------------------------------------------
+
+
+def _sample_rows(keys, logits, temperatures):
+    """All rows' sampling draws in ONE call: greedy at t <= 0, categorical
+    otherwise.  Per-REQUEST keys (``scheduler.Scheduler.sample_key``) —
+    vmapped so row i's draw is a function of its own key alone, never of a
+    shared engine rng or its neighbours.  Rows not being sampled this tick
+    carry dummy keys; the engine discards their slots."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.maximum(temperatures, 1e-6)
+    sampled = jax.vmap(jax.random.categorical)(
+        keys, logits / safe_t[:, None]).astype(jnp.int32)
+    return jnp.where(temperatures > 0.0, sampled, greedy)
+
+
+class PagedServingEngine(_ArchTracedEngine):
+    """Continuous batching over a paged KV cache.
+
+    Differences from the fixed-slot :class:`ServingEngine`:
+
+    * KV memory is a block pool (``serve/kv_cache.py``): sequences own
+      just the blocks their fill needs, a finished request's blocks
+      recycle into waiting requests mid-batch, and an over-committed pool
+      evicts (recompute-style) instead of refusing admission.
+    * Prefill is CHUNKED and rides the same jitted step as decode
+      (``lm.decode_paged``): one executable at chunk width + one at
+      width 1 serve every prompt length — no per-length recompiles and no
+      batch=1 admission stalls.
+    * RNG is per-request, folded at admission and per absolute token
+      position inside the step, so a request's tokens are independent of
+      batch composition, chunking, and eviction/resume (the property the
+      batch-invariance tests pin).
+
+    ``step()`` is a thin loop over ``scheduler.Scheduler``: plan → one
+    jitted call → sample the rows whose pending context emptied.
+    Attention families only (SSM state is O(1)/sequence — nothing to
+    page; the fixed-slot engine serves those).
+    """
+
+    def __init__(self, params, cfg, scfg: PagedServeConfig,
+                 collect_arch_trace: bool = False):
+        from repro.serve import kv_cache as kvc
+        from repro.serve import scheduler as sched
+        if cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                "PagedServingEngine needs an attention-family config "
+                f"(got family={cfg.family!r}); use ServingEngine for "
+                "ssm/hybrid archs")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        num_blocks = scfg.num_blocks or kvc.default_num_blocks(
+            scfg.slots, scfg.max_len, scfg.block_size)
+        pcfg = kvc.PagedCacheConfig(num_blocks=num_blocks,
+                                    block_size=scfg.block_size,
+                                    max_len=scfg.max_len)
+        if num_blocks < 1 + pcfg.blocks_per_seq:
+            raise ValueError(
+                f"num_blocks={num_blocks} cannot hold even one max_len="
+                f"{scfg.max_len} sequence (+1 null block) at block_size="
+                f"{scfg.block_size}; need >= {1 + pcfg.blocks_per_seq}")
+        self.kv = kvc.PagedKVCache(pcfg)
+        self.pages = lm.init_paged_cache(cfg, num_blocks, scfg.block_size)
+        self.scheduler = sched.Scheduler(
+            scfg, self.kv, base_key=jax.random.PRNGKey(scfg.seed),
+            on_finish=self._on_finish)
+        self._stochastic_substrate = cfg.sc_backend != "exact"
+        self._step_fn = jax.jit(partial(lm.decode_paged, cfg=cfg))
+        self._sample_fn = jax.jit(_sample_rows)
+        self.ticks = 0
+        self._init_arch(collect_arch_trace, cfg)
+
+    # -- queue/active views mirroring the fixed-slot engine's attributes --
+    @property
+    def queue(self):
+        return list(self.scheduler.waiting)
+
+    @property
+    def active(self):
+        return list(self.scheduler.rows)
+
+    @property
+    def finished(self):
+        return self.scheduler.finished
+
+    @property
+    def evictions(self) -> int:
+        return self.scheduler.evictions
+
+    def submit(self, req: Request):
+        self.scheduler.submit(req)
+
+    def _on_finish(self, req: Request):
+        if self.arch_collector is not None:
+            self.arch_collector.note_request(
+                req.rid, len(req.prompt) + len(req.generated))
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One tick: scheduler plan → one jitted chunked step → sample the
+        rows that consumed their pending context.  Returns False when
+        idle.  A raise mid-tick detaches the arch collector."""
+        with self._detach_on_error():
+            plan = self.scheduler.plan()
+            if plan is None:
+                return False
+            if not any(plan.n_valid):
+                raise RuntimeError(
+                    "scheduler produced a no-progress tick (every row "
+                    "deferred) — the block pool is mis-sized")
+            tokens = jnp.asarray(plan.tokens, jnp.int32)
+            lengths = jnp.asarray(plan.lengths, jnp.int32)
+            n_valid = jnp.asarray(plan.n_valid, jnp.int32)
+            tables = jnp.asarray(plan.tables, jnp.int32)
+            rng = jnp.stack(plan.keys) if self._stochastic_substrate else None
+            logits, self.pages = self._step_fn(
+                self.params, self.pages, tables, tokens, lengths, n_valid,
+                rng=rng)
+            if plan.sample_rows:
+                # One batched sampling call + one host sync per tick: the
+                # (slots, vocab) shapes are tick-invariant, so this stays
+                # a single compiled executable.  Non-sampling slots get
+                # dummy keys and their outputs are discarded.
+                keys = [self._dummy_sample_key()] * len(plan.tokens)
+                temps = [0.0] * len(plan.tokens)
+                for slot, seq in plan.sample_rows:
+                    keys[slot] = self.scheduler.sample_key(seq)
+                    temps[slot] = seq.req.temperature
+                toks = np.asarray(self._sample_fn(
+                    jnp.stack(keys), logits,
+                    jnp.asarray(temps, jnp.float32))).tolist()   # one sync
+                for slot, seq in plan.sample_rows:
+                    self.scheduler.on_token(slot, seq, toks[slot])
+            self.ticks += 1
+            return True
+
+    def _dummy_sample_key(self):
+        return self.scheduler._dummy_key
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        ticks = 0
+        while self.scheduler.has_work() and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.scheduler.finished

@@ -1,0 +1,176 @@
+"""Block-pool paged KV cache: fixed-size token blocks + per-sequence
+block tables + a freelist allocator.
+
+The paper's throughput argument is utilization — every MRAM cell an
+independent MUL engine only pays off if the system above keeps the arrays
+fed.  The serving-layer analogue of that argument is KV memory: a
+fixed-slot engine reserves ``slots × max_len`` cache rows up front, so a
+short request strands the tail of its row and a finished request strands
+the whole row until the tick drains.  Here KV memory is a pool of
+``num_blocks`` blocks of ``block_size`` tokens (per layer), sequences map
+positions through a block table (position t lives in
+``pages[table[t // bs], t % bs]``), and blocks alloc/free through a
+freelist — a finished request's blocks are recycled into waiting requests
+mid-batch.
+
+Block 0 is reserved as the NULL block: chunk padding and idle batch rows
+scatter their K/V there (see ``models/attention.py:paged_scatter``), so no
+live sequence ever maps it and the allocator never hands it out.
+
+The device-side pool tensors live in ``models/lm.py:init_paged_cache``;
+this module is the host-side bookkeeping (pure Python, O(1) per alloc).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+NULL_BLOCK = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Geometry of the paged pool.
+
+    ``num_blocks`` COUNTS the reserved null block, so the allocatable
+    capacity is ``(num_blocks - 1) * block_size`` tokens.  ``max_len``
+    bounds any single sequence (its block table has
+    ``ceil(max_len / block_size)`` entries — the gathered attention view
+    is that many blocks wide, padded rows masked).
+    """
+
+    num_blocks: int
+    block_size: int
+    max_len: int
+
+    def __post_init__(self):
+        if self.block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {self.block_size}")
+        if self.num_blocks < 2:
+            raise ValueError(
+                f"num_blocks must be >= 2 (block 0 is the reserved null "
+                f"block), got {self.num_blocks}")
+
+    @property
+    def blocks_per_seq(self) -> int:
+        return -(-self.max_len // self.block_size)
+
+    @property
+    def capacity_tokens(self) -> int:
+        return (self.num_blocks - 1) * self.block_size
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    """How many blocks a sequence of ``tokens`` tokens occupies."""
+    return -(-tokens // block_size)
+
+
+class BlockPool:
+    """Freelist over block ids 1..num_blocks-1 (0 is the null block)."""
+
+    def __init__(self, num_blocks: int):
+        # LIFO freelist: recently freed blocks are re-used first (their
+        # stale contents are fully overwritten before any masked read).
+        self._free = list(range(num_blocks - 1, 0, -1))
+        self._num_blocks = num_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> list[int] | None:
+        """Pop ``n`` blocks, or None (and no change) if fewer are free."""
+        if n > len(self._free):
+            return None
+        got = self._free[-n:][::-1]
+        del self._free[-n:]
+        return got
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if not (0 < b < self._num_blocks):
+                raise ValueError(f"freeing invalid block id {b}")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+        self._free.extend(blocks)
+
+
+class PagedKVCache:
+    """Host-side paged-cache bookkeeping: pool + per-sequence block tables.
+
+    Device tensors (the per-layer page pools) are owned by the engine —
+    this class tracks which blocks belong to which sequence and hands out
+    padded block-table rows for the jitted step.
+    """
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        self.pool = BlockPool(cfg.num_blocks)
+        self.tables: dict[int, list[int]] = {}      # seq id -> block ids
+
+    # ------------------------------------------------------------------
+    @property
+    def free_tokens(self) -> int:
+        return self.pool.free_blocks * self.cfg.block_size
+
+    def has_room(self, seq_id: int, upto_tokens: int) -> bool:
+        have = len(self.tables.get(seq_id, []))
+        need = blocks_for(min(upto_tokens, self.cfg.max_len),
+                          self.cfg.block_size) - have
+        return need <= self.pool.free_blocks
+
+    def ensure(self, seq_id: int, upto_tokens: int) -> bool:
+        """Grow ``seq_id``'s table to cover ``upto_tokens`` positions.
+
+        Returns False (allocating nothing) when the pool cannot cover the
+        growth — the scheduler then evicts or defers.  Never partially
+        allocates, so a False return leaves the cache consistent.
+        """
+        if upto_tokens > self.cfg.max_len:
+            raise ValueError(
+                f"sequence {seq_id} wants {upto_tokens} tokens > "
+                f"max_len {self.cfg.max_len}")
+        table = self.tables.setdefault(seq_id, [])
+        need = blocks_for(upto_tokens, self.cfg.block_size) - len(table)
+        if need <= 0:
+            return True
+        got = self.pool.alloc(need)
+        if got is None:
+            return False
+        table.extend(got)
+        return True
+
+    def release(self, seq_id: int) -> int:
+        """Free every block of ``seq_id``; returns how many were freed."""
+        table = self.tables.pop(seq_id, [])
+        self.pool.free(table)
+        return len(table)
+
+    def table_row(self, seq_id: int) -> list[int]:
+        """``seq_id``'s block table padded to ``blocks_per_seq`` with the
+        null block — one row of the (b, nb) device array."""
+        table = self.tables.get(seq_id, [])
+        pad = self.cfg.blocks_per_seq - len(table)
+        return table + [NULL_BLOCK] * pad
+
+    def null_row(self) -> list[int]:
+        return [NULL_BLOCK] * self.cfg.blocks_per_seq
+
+    @property
+    def live_blocks(self) -> int:
+        return sum(len(t) for t in self.tables.values())
+
+    def utilization(self) -> float:
+        """Fraction of allocatable blocks currently mapped by sequences."""
+        total = self.cfg.num_blocks - 1
+        return self.live_blocks / total if total else 0.0
+
+
+def default_num_blocks(slots: int, max_len: int, block_size: int) -> int:
+    """Pool size matching the fixed-slot engine's reservation: enough
+    blocks for every slot at full length, plus the null block.  Passing
+    fewer (``--max-blocks``) is how operators trade memory for eviction
+    pressure."""
+    return 1 + slots * math.ceil(max_len / block_size)

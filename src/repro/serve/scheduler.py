@@ -1,0 +1,234 @@
+"""Continuous-batching scheduler: admission, chunked prefill, eviction.
+
+One scheduler tick produces one :class:`TickPlan` — the padded arrays a
+single jitted ``models/lm.py:decode_paged`` call consumes.  Every batch
+row is in exactly one phase per tick:
+
+* **prefill** — the row feeds the next ``prefill_chunk`` tokens of its
+  pending context (prompt, or prompt + generated after an eviction);
+* **decode** — the row feeds its one last sampled token;
+* **idle** — no request mapped (or deferred this tick): ``n_valid = 0``,
+  K/V writes go to the null block, logits ignored.
+
+Requests admit from a FIFO queue the moment a row and enough pool blocks
+free up — mid-batch, not when the tick drains.  When the pool cannot
+cover a row's next chunk, the most recently admitted *other* row is
+evicted (LIFO victim, vLLM's recompute policy): its blocks free
+immediately, and it re-queues at the FRONT of the waiting queue with
+``pending = prompt + generated`` so it re-prefills its full context on
+re-admission.
+
+RNG contract: each request's key is folded ONCE, at submission
+(``fold_in(base_key, rid)`` unless the request carries its own seed), and
+every stochastic draw downstream — SC bits per token (see
+``decode_paged``) and the sampling draw per generated token — derives
+from (that key, absolute position).  Tokens are therefore a function of
+the request alone: the same request with the same key decodes identically
+served solo, batched, admitted mid-stream, or evicted and resumed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+
+from repro.serve.kv_cache import PagedKVCache
+
+_SAMPLE_SALT = 0x5EED       # separates sampling folds from SC-bit folds
+
+
+@dataclasses.dataclass
+class Sequence:
+    """One admitted request's scheduling state."""
+
+    req: object                     # serve.engine.Request
+    key: object                     # raw (2,) uint32 per-request key
+    fed: int = 0                    # context tokens already in the cache
+    pending: list = dataclasses.field(default_factory=list)
+
+    @property
+    def context_len(self) -> int:
+        return len(self.req.prompt) + len(self.req.generated)
+
+    def reset_for_recompute(self) -> None:
+        """Eviction: drop cache state, keep tokens; re-prefill everything."""
+        self.fed = 0
+        self.pending = list(self.req.prompt) + list(self.req.generated)
+
+
+@dataclasses.dataclass
+class TickPlan:
+    """Arrays for one ``decode_paged`` call, plus host bookkeeping."""
+
+    sc: int                         # chunk width of this tick (1 = decode)
+    tokens: list                    # (b, sc) int
+    lengths: list                   # (b,) pre-feed fill
+    n_valid: list                   # (b,) real tokens per row
+    tables: list                    # (b, nb) block-table rows
+    keys: list                      # (b,) raw per-request keys (dummy if idle)
+    sample_rows: list               # [(slot, Sequence)] rows to sample after
+
+
+class Scheduler:
+    """Owns the waiting queue, the row grid, and the block allocator."""
+
+    def __init__(self, scfg, kv: PagedKVCache, base_key, on_finish=None):
+        self.scfg = scfg
+        self.kv = kv
+        self.base_key = base_key
+        self.on_finish = on_finish
+        self.waiting: deque = deque()
+        self.rows: list = [None] * scfg.slots        # slot -> Sequence | None
+        self.admit_stack: list = []                  # admission order (LIFO)
+        self.finished: list = []
+        self.evictions = 0
+        self._dummy_key = jax.random.PRNGKey(0)
+
+    # ------------------------------------------------------------------
+    def submit(self, req) -> None:
+        key = getattr(req, "key", None)
+        if key is None:
+            key = jax.random.fold_in(self.base_key, req.rid)
+            req.key = key
+        seq = Sequence(req=req, key=key,
+                       pending=list(req.prompt) + list(req.generated))
+        self.waiting.append(seq)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.rows)
+
+    @property
+    def active_count(self) -> int:
+        return sum(r is not None for r in self.rows)
+
+    # ------------------------------------------------------------------
+    def _evict_victim(self, keep: Sequence) -> int | None:
+        """Free the most recently admitted row other than ``keep``.
+
+        Returns the evicted slot (so an in-flight tick plan can cancel the
+        victim's feed), or None when ``keep`` is the only admitted row."""
+        for victim in reversed(self.admit_stack):
+            if victim is keep:
+                continue
+            slot = self.rows.index(victim)
+            self.kv.release(victim.req.rid)
+            self.rows[slot] = None
+            self.admit_stack.remove(victim)
+            victim.reset_for_recompute()
+            self.waiting.appendleft(victim)
+            self.evictions += 1
+            return slot
+        return None
+
+    def _admit(self) -> None:
+        for slot in range(self.scfg.slots):
+            if self.rows[slot] is not None or not self.waiting:
+                continue
+            seq = self.waiting[0]
+            first = min(len(seq.pending), self.scfg.prefill_chunk)
+            if not self.kv.has_room(seq.req.rid, first):
+                break                        # FIFO: don't starve the head
+            self.waiting.popleft()
+            self.kv.ensure(seq.req.rid, first)
+            self.rows[slot] = seq
+            self.admit_stack.append(seq)
+
+    # ------------------------------------------------------------------
+    def plan(self) -> TickPlan | None:
+        """Build the next tick, mutating row state optimistically (the
+        engine always executes the returned plan).  None = nothing to do.
+
+        Two passes.  Pass A reserves pool blocks for every row's intended
+        feed, evicting LIFO victims on OOM — and CANCELLING a victim's
+        already-granted feed if it was planned earlier in this same tick
+        (its blocks just went back to the pool, so letting it run would
+        alias freshly re-allocated blocks).  Pass B builds the padded
+        arrays only for feeds that survived pass A.
+
+        A row always feeds ``min(len(pending), prefill_chunk)`` tokens —
+        a request-local quantity — so a request's chunk boundaries never
+        depend on its batch neighbours (decode_paged's per-position rng
+        makes numerics chunking-invariant anyway; this keeps schedules
+        reproducible too).  The tick width ``sc`` is the widest surviving
+        feed: pure-decode ticks collapse to ``sc = 1`` so steady-state
+        decoding compiles once and pays no chunk-width padding.
+        """
+        self._admit()
+        if not any(r is not None for r in self.rows):
+            return None
+        planned: dict = {}                    # slot -> granted feed length
+        for slot in range(self.scfg.slots):
+            seq = self.rows[slot]
+            if seq is None:                   # may have been evicted above
+                continue
+            want = min(len(seq.pending), self.scfg.prefill_chunk)
+            while want and not self.kv.ensure(seq.req.rid, seq.fed + want):
+                victim_slot = self._evict_victim(keep=seq)
+                if victim_slot is None:
+                    want = 0                  # defer: sole row, pool full
+                    break
+                planned.pop(victim_slot, None)
+            planned[slot] = want
+        # Tick width: EXACTLY two shapes ever reach the jitted step —
+        # prefill ticks run at the full chunk width (tail chunks pad, the
+        # padding is n_valid-masked into the null block) and pure-decode
+        # ticks at width 1 — so serving never recompiles mid-traffic
+        # however prompt lengths mix.
+        sc = (self.scfg.prefill_chunk
+              if any(n > 1 for n in planned.values()) else 1)
+        tokens, lengths, n_valid, tables, keys = [], [], [], [], []
+        sample_rows = []
+        for slot in range(self.scfg.slots):
+            seq = self.rows[slot]
+            n = planned.get(slot, 0)
+            if seq is None:
+                tokens.append([0] * sc)
+                lengths.append(0)
+                n_valid.append(0)
+                tables.append(self.kv.null_row())
+                keys.append(self._dummy_key)
+                continue
+            feed = seq.pending[:n]
+            seq.pending = seq.pending[n:]
+            tokens.append(list(feed) + [0] * (sc - n))
+            lengths.append(seq.fed)
+            n_valid.append(n)
+            tables.append(self.kv.table_row(seq.req.rid))
+            keys.append(seq.key)
+            seq.fed += n
+            if n and not seq.pending:
+                sample_rows.append((slot, seq))
+        return TickPlan(sc=sc, tokens=tokens, lengths=lengths,
+                        n_valid=n_valid, tables=tables, keys=keys,
+                        sample_rows=sample_rows)
+
+    # ------------------------------------------------------------------
+    def sample_key(self, seq: Sequence):
+        """Key for the sampling draw at ``seq``'s current position — a
+        function of (request key, position) only, so re-sampling after an
+        eviction resume reproduces the same draw."""
+        return jax.random.fold_in(
+            jax.random.fold_in(seq.key, _SAMPLE_SALT), seq.fed)
+
+    def on_token(self, slot: int, seq: Sequence, token: int) -> None:
+        """Record a sampled token and finish or continue the row."""
+        seq.req.generated.append(token)
+        hit_eos = token == self.scfg.eos_id
+        hit_max = len(seq.req.generated) >= seq.req.max_new_tokens
+        hit_cap = seq.fed >= self.scfg.max_len - 1
+        if hit_eos or hit_max or hit_cap:
+            self._finish(slot, seq)
+        else:
+            seq.pending = [token]
+
+    def _finish(self, slot: int, seq: Sequence) -> None:
+        seq.req.done = True
+        self.kv.release(seq.req.rid)
+        self.rows[slot] = None
+        if seq in self.admit_stack:
+            self.admit_stack.remove(seq)
+        self.finished.append(seq.req)
+        if self.on_finish is not None:
+            self.on_finish(seq.req)

@@ -120,6 +120,74 @@ def test_conversion_roundtrip_at_boundary_operands():
         assert x_back == x, (x, float(tau), float(p))
 
 
+def test_operand_grid_has_2n_levels_and_p1_clamps():
+    """Regression (encode operand-grid off-by-one): round(p·2^n)/2^n yields
+    2^n + 1 levels with p = 1.0 on the nonexistent LUT index 2^n.  The grid
+    must have exactly 2^n levels — indices 0 .. 2^n - 1 (§III-A) — with the
+    max-magnitude operand clamped to the top representable level."""
+    from repro.sc import encoding
+    from repro.sc.config import ScConfig
+    for nbits in (4, 8, 10):
+        cfg = ScConfig(operand_bits=nbits)
+        levels = 1 << nbits
+        # values spanning the full magnitude range incl. the max element
+        v = jnp.linspace(-1.0, 1.0, 4 * levels + 1)
+        _, p, scale = encoding.encode(v, cfg)
+        idx = np.asarray(p) * levels
+        np.testing.assert_allclose(idx, np.round(idx), atol=1e-4)
+        assert float(scale) == 1.0
+        # p = |v|/scale = 1.0 for the max element: must land on 2^n - 1
+        assert int(idx.max()) == levels - 1, idx.max()
+        assert idx.min() >= 0
+
+
+def test_operand_grid_full_sweep_round_trips():
+    """Every LUT index i survives encode()'s grid untouched: a value already
+    ON the grid (p = i/2^n, i < 2^n) re-encodes to exactly index i."""
+    from repro.sc import encoding
+    from repro.sc.config import ScConfig
+    cfg = ScConfig(operand_bits=10)
+    levels = 1 << 10
+    i = np.arange(levels)
+    v = jnp.asarray(np.concatenate([[1.0], i / levels]))  # scale anchor = 1
+    _, p, _ = encoding.encode(v, cfg)
+    got = np.asarray(p[1:]) * levels
+    np.testing.assert_array_equal(got.astype(np.int64), i)
+
+
+def test_fx16_round_trip_exact_on_operand_grid():
+    """Regression (fx16 downward bias): every level of the n-bit operand
+    grid (n <= 16) must survive to_fx16 -> from_fx16 EXACTLY — including
+    the top level, which previously collapsed against the 65535 clamp."""
+    from repro.sc import encoding
+    for nbits in (4, 10, 16):
+        levels = 1 << nbits
+        p = jnp.arange(levels, dtype=jnp.float32) / levels
+        words = encoding.to_fx16(p)
+        np.testing.assert_array_equal(
+            np.asarray(words), np.arange(levels) * (65536 // levels))
+        back = encoding.from_fx16(words)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(p))
+
+
+def test_fx16_matches_packed_engine_bias_convention():
+    """from_fx16 is the bias the Horner ladder realizes: P(bit=1) = w/2^16.
+    Chain an encoded grid operand through to_fx16 and check the packed
+    engine's expected pop-count E[count] = nbit·(w_x/2^16)·(w_y/2^16) is
+    exactly p_x·p_y·nbit on the grid (no systematic truncation loss)."""
+    from repro.sc import encoding
+    from repro.sc.config import ScConfig
+    cfg = ScConfig(operand_bits=10)
+    v = jnp.asarray([1.0, 0.5, 0.25])          # max element -> top level
+    _, p, _ = encoding.encode(v, cfg)
+    w = encoding.to_fx16(p)
+    realized = np.asarray(encoding.from_fx16(w), np.float64)
+    expect = np.asarray(p, np.float64)
+    np.testing.assert_array_equal(realized, expect)
+    # top grid level: 1023/1024 exactly, NOT 65535/65536
+    assert realized[0] == 1023.0 / 1024.0
+
+
 def test_fx16_bias_words_at_boundaries():
     """encoding.to_fx16 at the fx16 boundaries: p=0 -> word 0, p=1 clamps
     to 65535 (not overflowing to 65536), and the represented bias is

@@ -1,0 +1,381 @@
+"""Paged continuous-batching serve path: block pool, paged == contiguous
+attention, batch-composition invariance, eviction/resume determinism, and
+the arch-collector lifecycle fixes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import attention, lm, params as P
+from repro.serve import (PagedCacheConfig, PagedServeConfig,
+                         PagedServingEngine, PagedKVCache, Request,
+                         ServeConfig, ServingEngine)
+from repro.serve.kv_cache import BlockPool, blocks_for, default_num_blocks
+
+F32 = dict(param_dtype=jnp.float32, act_dtype=jnp.float32)
+
+
+def _cfg(arch="qwen2-0.5b", **kw):
+    return get_smoke_config(arch).replace(**F32, **kw)
+
+
+def _params(key, cfg):
+    return P.init_params(key, lm.lm_param_specs(cfg), cfg.param_dtype)
+
+
+def _paged_engine(params, cfg, collect=False, **kw):
+    defaults = dict(slots=2, max_len=64, block_size=4, prefill_chunk=3)
+    defaults.update(kw)
+    return PagedServingEngine(params, cfg, PagedServeConfig(**defaults),
+                              collect_arch_trace=collect)
+
+
+# ---------------------------------------------------------------------------
+# Block pool / host bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_alloc_free_roundtrip():
+    pool = BlockPool(num_blocks=5)              # blocks 1..4 allocatable
+    assert pool.free_blocks == 4
+    got = pool.alloc(3)
+    assert len(got) == 3 and 0 not in got
+    assert pool.alloc(2) is None                # only 1 left: no partial
+    assert pool.free_blocks == 1
+    pool.free(got)
+    assert pool.free_blocks == 4
+    with pytest.raises(ValueError):
+        pool.free([0])                          # null block is unpoolable
+    only = pool.alloc(4)
+    pool.free(only)
+    with pytest.raises(ValueError):
+        pool.free([only[0]])                    # double free
+
+
+def test_paged_cache_ensure_grow_release():
+    kv = PagedKVCache(PagedCacheConfig(num_blocks=9, block_size=4,
+                                       max_len=32))
+    assert kv.cfg.blocks_per_seq == 8
+    assert kv.ensure(7, 5)                      # 5 tokens -> 2 blocks
+    assert len(kv.tables[7]) == 2
+    assert kv.ensure(7, 8)                      # same 2 blocks
+    assert len(kv.tables[7]) == 2
+    assert kv.ensure(7, 9)                      # grows to 3
+    assert len(kv.tables[7]) == 3
+    row = kv.table_row(7)
+    assert len(row) == 8 and row[3:] == [0] * 5  # null-padded
+    assert not kv.ensure(8, 32)                 # 8 blocks > 5 free
+    assert 8 not in kv.tables or kv.tables[8] == []   # nothing leaked
+    assert kv.release(7) == 3
+    assert kv.ensure(8, 32)
+    assert blocks_for(1, 4) == 1 and blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+    assert default_num_blocks(4, 64, 16) == 1 + 4 * 4
+
+
+def test_paged_cache_tables_are_disjoint():
+    kv = PagedKVCache(PagedCacheConfig(num_blocks=9, block_size=4,
+                                       max_len=16))
+    kv.ensure(0, 16)
+    kv.ensure(1, 16)
+    assert not set(kv.tables[0]) & set(kv.tables[1])
+    assert 0 not in kv.tables[0] + kv.tables[1]
+
+
+# ---------------------------------------------------------------------------
+# Paged == contiguous attention (the lookup-level equivalence proof)
+# ---------------------------------------------------------------------------
+
+
+def _pages_from_prefill(cfg, cache, lengths, block_size, num_blocks):
+    """Scatter a contiguous prefill cache into a page pool (row 0 only)."""
+    s = int(lengths[0])
+    nb = -(-cache["k"].shape[2] // block_size)
+    pages = lm.init_paged_cache(cfg, num_blocks, block_size)
+    bt = jnp.asarray([[1 + i for i in range(nb)]], jnp.int32)
+
+    def put(pool, full):
+        def one(pg, fl):
+            return attention.paged_scatter(
+                pg, bt, fl[:, :s], jnp.zeros((1,), jnp.int32),
+                jnp.asarray([s], jnp.int32))
+        return jax.vmap(one)(pool, full)
+
+    return ({"k": put(pages["k"], cache["k"]),
+             "v": put(pages["v"], cache["v"])}, bt)
+
+
+@pytest.mark.parametrize("block_size", [2, 4, 8, 16])
+def test_paged_attention_matches_contiguous(key, block_size):
+    """decode over gathered pages == decode over the contiguous cache,
+    across block sizes (incl. one partially filled block)."""
+    cfg = _cfg()
+    params = _params(key, cfg)
+    prompt = jnp.asarray([[5, 9, 17, 3, 8]], jnp.int32)
+    logits0, cache, lengths = lm.prefill(params, prompt, cfg, max_len=32)
+    tok = jnp.argmax(logits0, -1).astype(jnp.int32)
+    ref, _ = lm.decode_step(params, cache, tok, lengths, cfg)
+    nb = -(-32 // block_size)
+    pages, bt = _pages_from_prefill(cfg, cache, lengths, block_size, nb + 2)
+    got, _ = lm.decode_paged(params, pages, bt, tok[:, None], lengths,
+                             jnp.ones((1,), jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_gather_reconstructs_contiguous_layout(key):
+    """paged_gather(bt) of a scattered cache == the contiguous original —
+    the storage-level statement of the same equivalence."""
+    cfg = _cfg()
+    params = _params(key, cfg)
+    prompt = jnp.asarray([[5, 9, 17, 3, 8, 2, 30]], jnp.int32)
+    _, cache, lengths = lm.prefill(params, prompt, cfg, max_len=16)
+    pages, bt = _pages_from_prefill(cfg, cache, lengths, 4, 8)
+    s = int(lengths[0])
+    for name in ("k", "v"):
+        gathered = jax.vmap(
+            lambda pg: attention.paged_gather(pg, bt))(pages[name])
+        np.testing.assert_array_equal(
+            np.asarray(gathered[:, :, :s]), np.asarray(cache[name][:, :, :s]))
+
+
+def test_chunked_prefill_matches_one_shot(key):
+    """Feeding the prompt through decode_paged in chunks reproduces the
+    one-shot prefill logits exactly (what admission relies on)."""
+    cfg = _cfg()
+    params = _params(key, cfg)
+    toks = [5, 9, 17, 3, 40, 2, 8]
+    ref, _, _ = lm.prefill(params, jnp.asarray([toks], jnp.int32), cfg,
+                           max_len=32)
+    for chunk in (2, 3, 7):
+        pages = lm.init_paged_cache(cfg, 10, 4)
+        bt = jnp.asarray([[1 + i for i in range(8)]], jnp.int32)
+        lens = jnp.zeros((1,), jnp.int32)
+        for c0 in range(0, len(toks), chunk):
+            feed = toks[c0:c0 + chunk]
+            nv = len(feed)
+            feed = feed + [0] * (chunk - nv)
+            logits, pages = lm.decode_paged(
+                params, pages, bt, jnp.asarray([feed], jnp.int32), lens,
+                jnp.asarray([nv], jnp.int32), cfg)
+            lens = lens + nv
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_decode_paged_rejects_ssm_family():
+    cfg = _cfg("mamba2-370m")
+    with pytest.raises(ValueError):
+        lm.init_paged_cache(cfg, 8, 4)
+    with pytest.raises(ValueError):
+        PagedServingEngine({}, cfg, PagedServeConfig())
+
+
+# ---------------------------------------------------------------------------
+# Engine-level equivalence + batch-composition invariance
+# ---------------------------------------------------------------------------
+
+
+def test_paged_engine_greedy_matches_fixed_slot_and_reference(key):
+    cfg = _cfg()
+    params = _params(key, cfg)
+    prompts = {0: [5, 9, 17, 3], 1: [40, 2, 8, 30, 7]}
+    pe = _paged_engine(params, cfg)
+    fe = ServingEngine(params, cfg, ServeConfig(slots=2, max_len=64))
+    for rid, p in prompts.items():
+        pe.submit(Request(rid=rid, prompt=list(p), max_new_tokens=5))
+        fe.submit(Request(rid=rid, prompt=list(p), max_new_tokens=5))
+    got_p = {r.rid: r.generated for r in pe.run_until_drained()}
+    got_f = {r.rid: r.generated for r in fe.run_until_drained()}
+    assert got_p == got_f
+    # cacheless greedy reference for request 0
+    toks = list(prompts[0])
+    for expect in got_p[0]:
+        logits = lm.forward(params, jnp.asarray([toks], jnp.int32), cfg)
+        assert int(jnp.argmax(logits[0, -1])) == expect
+        toks.append(expect)
+
+
+def _run_paged(params, cfg, reqs, *, slots, seed=7, num_blocks=0,
+               submit_after=None, **kw):
+    eng = _paged_engine(params, cfg, slots=slots, seed=seed,
+                        num_blocks=num_blocks, **kw)
+    late = dict(submit_after or {})             # after-tick -> Request
+    for r in reqs:
+        eng.submit(r)
+    ticks = 0
+    while eng.scheduler.has_work() or late:
+        for t in [t for t in sorted(late) if ticks >= t]:
+            eng.submit(late.pop(t))
+        eng.step()
+        ticks += 1
+        assert ticks < 500
+    return eng, {r.rid: r.generated for r in eng.finished}
+
+
+REQ0 = dict(rid=0, prompt=[5, 9, 17, 3], max_new_tokens=6, temperature=0.8)
+REQ1 = dict(rid=1, prompt=[40, 2, 8, 30, 7, 11, 2, 4], max_new_tokens=6,
+            temperature=0.3)
+REQ2 = dict(rid=2, prompt=[12, 33, 7], max_new_tokens=4, temperature=0.0)
+
+
+def test_batch_composition_invariance_stochastic(key):
+    """Same request + same key => same tokens, served alone, in a full
+    batch, or admitted mid-stream — on a STOCHASTIC substrate (the SC rng
+    folds per (request, position), never per batch)."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=512)
+    params = _params(key, cfg)
+    _, solo = _run_paged(params, cfg, [Request(**REQ0)], slots=1)
+    _, full = _run_paged(
+        params, cfg, [Request(**REQ0), Request(**REQ1), Request(**REQ2)],
+        slots=3)
+    _, mid = _run_paged(
+        params, cfg, [Request(**REQ1), Request(**REQ2)], slots=2,
+        submit_after={3: Request(**REQ0)})      # admitted mid-stream
+    assert solo[0] == full[0]
+    assert full[0] == mid[0]
+    _, solo1 = _run_paged(params, cfg, [Request(**REQ1)], slots=1)
+    assert solo1[1] == full[1] == mid[1]
+
+
+def test_mid_stream_admission_invariance_greedy(key):
+    """A greedy request admitted after several ticks (mid-batch refill)
+    decodes exactly as when admitted first."""
+    cfg = _cfg()
+    params = _params(key, cfg)
+    _, first = _run_paged(params, cfg, [Request(**REQ2)], slots=1)
+    _, late = _run_paged(params, cfg, [Request(**REQ1)], slots=2,
+                         submit_after={2: Request(**REQ2)})
+    assert late[2] == first[2]
+
+
+def test_eviction_resume_reproduces_tokens(key):
+    """A tight pool forces an eviction; the evicted request re-prefills
+    its context and must produce the SAME tokens as with a roomy pool
+    (per-position rng + recompute-mode eviction)."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=512)
+    params = _params(key, cfg)
+    # 10 + 16 = 26 tokens/seq = 7 blocks each; the 12-usable-block pool
+    # cannot hold both, so one sequence must evict and resume.
+    mk = lambda: [
+        Request(rid=0, prompt=[5, 9, 17, 3, 8, 2, 30, 11, 7, 6],
+                max_new_tokens=16, temperature=0.6),
+        Request(rid=1, prompt=[40, 2, 8, 30, 7, 11, 2, 4, 9, 9],
+                max_new_tokens=16, temperature=0.6)]
+    roomy_e, roomy = _run_paged(params, cfg, mk(), slots=2, max_len=48,
+                                prefill_chunk=4)
+    tight_e, tight = _run_paged(params, cfg, mk(), slots=2, max_len=48,
+                                prefill_chunk=4, num_blocks=13)
+    assert tight_e.evictions > 0, "pool was meant to force an eviction"
+    assert roomy_e.evictions == 0
+    assert roomy == tight
+    assert tight_e.kv.pool.free_blocks == 12    # everything released
+
+
+def test_finished_blocks_recycle_mid_batch(key):
+    """More requests than the pool could hold at once all complete: a
+    finished request's blocks are reused by waiting requests without
+    waiting for the batch to drain."""
+    cfg = _cfg()
+    params = _params(key, cfg)
+    reqs = [Request(rid=i, prompt=[3 + i, 7, 11], max_new_tokens=4)
+            for i in range(6)]
+    eng, got = _run_paged(params, cfg, reqs, slots=2, max_len=32,
+                          num_blocks=1 + 2 * 8)
+    assert sorted(got) == list(range(6))
+    assert all(1 <= len(v) <= 4 for v in got.values())
+    assert eng.kv.live_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# Arch-collector lifecycle (close idempotency + detach-on-raise)
+# ---------------------------------------------------------------------------
+
+
+def _listener_count():
+    from repro.arch import trace
+    return len(trace._LISTENERS)
+
+
+def test_close_is_idempotent_fixed_slot(key):
+    cfg = _cfg(sc_backend="array", sc_nbit=64)
+    params = _params(key, cfg)
+    n0 = _listener_count()
+    eng = ServingEngine(params, cfg, ServeConfig(slots=1, max_len=32),
+                        collect_arch_trace=True)
+    assert _listener_count() == n0 + 1
+    eng.close()
+    assert _listener_count() == n0
+    eng.close()                                 # double close: no-op
+    eng.close()
+    assert _listener_count() == n0
+    eng.__del__()                               # close() then __del__
+    assert _listener_count() == n0
+
+
+def test_close_is_idempotent_paged(key):
+    cfg = _cfg(sc_backend="array", sc_nbit=64)
+    params = _params(key, cfg)
+    n0 = _listener_count()
+    eng = _paged_engine(params, cfg, slots=1, max_len=32)
+    engt = PagedServingEngine(params, cfg, PagedServeConfig(
+        slots=1, max_len=32, block_size=4), collect_arch_trace=True)
+    assert _listener_count() == n0 + 1          # eng has no collector
+    engt.close(); engt.close()
+    assert _listener_count() == n0
+    eng.close()                                 # collector-less close: no-op
+    assert _listener_count() == n0
+
+
+def test_step_raise_detaches_collector(key):
+    """A step() that raises mid-tick must uninstall the collector before
+    propagating — and the records must stay readable."""
+    cfg = _cfg(sc_backend="array", sc_nbit=64)
+    params = _params(key, cfg)
+    n0 = _listener_count()
+    eng = ServingEngine(params, cfg, ServeConfig(slots=1, max_len=32),
+                        collect_arch_trace=True)
+    eng.submit(Request(rid=0, prompt=[5, 9], max_new_tokens=2))
+    eng.step()                                  # records prefill + decode
+    records_before = len(eng.arch_collector.records)
+    assert records_before > 0
+
+    def boom(*a, **k):
+        raise RuntimeError("mid-tick failure")
+    eng._decode = boom
+    eng.submit(Request(rid=1, prompt=[6, 7], max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="mid-tick"):
+        eng.step()
+    assert _listener_count() == n0              # detached despite the raise
+    assert len(eng.arch_collector.records) == records_before
+    eng.close()                                 # still a no-op
+    assert _listener_count() == n0
+
+
+def test_arch_report_prices_cost_per_request(key):
+    """The collector's per-request token stamps prorate the aggregate
+    trace cost under mixed traffic: shares sum to 1 and scale with each
+    request's token count."""
+    cfg = _cfg(sc_backend="array", sc_nbit=64)
+    params = _params(key, cfg)
+    eng = _paged_engine(params, cfg, slots=2, max_len=32, collect=True)
+    eng.submit(Request(rid=0, prompt=[5, 9], max_new_tokens=2))
+    eng.submit(Request(rid=1, prompt=[40, 2, 8, 30, 7, 3], max_new_tokens=5))
+    eng.run_until_drained()
+    try:
+        report = eng.arch_report()
+        assert report is not None and report.cycles > 0
+        costs = eng.arch_request_costs()
+        assert set(costs) == {0, 1}
+        shares = sum(c["share"] for c in costs.values())
+        assert abs(shares - 1.0) < 1e-6
+        by_rid = {r.rid: r for r in eng.finished}
+        for rid, c in costs.items():
+            r = by_rid[rid]
+            assert c["tokens"] == len(r.prompt) + len(r.generated)
+        assert abs(sum(c["energy_pj"] for c in costs.values())
+                   - report.energy_pj) < 1e-3 * max(report.energy_pj, 1)
+    finally:
+        eng.close()
