@@ -4,7 +4,6 @@ Gaussian, zero-centered, sigma ~ 1.6 %); (b) sigma vs nbit and vs tau_Y."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bar, emit, section

@@ -8,12 +8,17 @@ Three views:
   2. Modeled SOT-MRAM array cycles for each measured (backend, shape) from
      the repro.arch pulse-schedule compiler — what the same call costs on
      the paper's hardware, next to what it costs this host.
-  3. Analytic TPU roofline of the fused kernel vs the unfused 3-matmul
+  3. Head-to-head gate: ``pallas_fused`` vs ``pallas_bitexact`` on the
+     same operands — asserts bit-exact equivalence (same key ⇒ same
+     bits) and a speedup floor (≥2x at full size; noise floor under
+     ``--tiny``), recorded under ``fused_vs_bitexact``.
+  4. Analytic TPU roofline of the fused kernel vs the unfused 3-matmul
      formulation — the fusion is the beyond-paper optimization, tripling
      arithmetic intensity at equal HBM traffic (§Perf iteration 3).
 
 Writes ``BENCH_sc_matmul.json``: backend × shape → wall-time µs + modeled
-array cycles (the machine-readable perf trajectory CI archives).
+array cycles (the machine-readable perf trajectory CI archives and
+``tools/bench_compare.py`` gates against ``benchmarks/baselines/``).
 ``--tiny`` shrinks shapes for smoke/CI runs.
 """
 
@@ -32,12 +37,21 @@ M, K, N = 512, 2048, 512
 NBIT = 1024
 
 # backends that materialize every (i, k, j) product run on a reduced shape
+# (pallas_fused shares pallas_bitexact's shape: the two are compared
+# head-to-head below and must see identical operands)
 _REDUCED = {"bitexact": (64, 256, 64), "pallas_bitexact": (8, 32, 8),
-            "array": (64, 256, 64)}
+            "pallas_fused": (8, 32, 8), "array": (64, 256, 64)}
 
 _TINY = dict(full=(32, 128, 32), reduced={"bitexact": (8, 32, 8),
                                           "pallas_bitexact": (4, 16, 4),
+                                          "pallas_fused": (4, 16, 4),
                                           "array": (8, 32, 8)})
+
+# full-size gate: the fused engine must beat the packed three-stage
+# engine by at least this factor (bitstreams never leaving VMEM is the
+# point); --tiny smoke runs keep a noise floor only, like serve_bench
+FUSED_SPEEDUP_FLOOR = 2.0
+FUSED_SPEEDUP_FLOOR_TINY = 0.8
 
 
 def analytic_roofline():
@@ -123,12 +137,37 @@ def main(key=None, tiny: bool = False):
             emit(f"scmac.us.{backend}", round(t, 1), note)
             put(backend, m0, k0, n0, t, note)
 
+    section("Fused engine vs packed three-stage engine (pallas_fused "
+            "vs pallas_bitexact)")
+    m, k, n = reduced["pallas_bitexact"]
+    xs, ws = x[:m, :k], w[:k, :n]
+    yb = sc.sc_dot(kk, xs, ws,
+                   sc.ScConfig(backend="pallas_bitexact", nbit=NBIT))
+    yf = sc.sc_dot(kk, xs, ws,
+                   sc.ScConfig(backend="pallas_fused", nbit=NBIT))
+    bit_exact = bool(jnp.all(yb == yf))
+    speedup = (results["pallas_bitexact"]["wall_us"]
+               / max(results["pallas_fused"]["wall_us"], 1e-9))
+    emit("scmac.fused.bit_exact", int(bit_exact),
+         "same key => same bits as pallas_bitexact")
+    emit("scmac.fused.speedup", round(speedup, 2),
+         f"fused vs packed at {m}x{k}x{n}, nbit={NBIT}")
+    assert bit_exact, (
+        "pallas_fused diverged from pallas_bitexact under a shared key — "
+        "the counter-based streams are out of sync")
+    floor = FUSED_SPEEDUP_FLOOR_TINY if tiny else FUSED_SPEEDUP_FLOOR
+    assert speedup >= floor, (
+        f"pallas_fused speedup {speedup:.2f}x below the {floor}x floor "
+        f"at {m}x{k}x{n} (tiny={tiny})")
+    fused_cmp = {"shape": [m, k, n], "nbit": NBIT, "bit_exact": bit_exact,
+                 "speedup": round(speedup, 2), "floor": floor}
+
     section("Analytic v5e roofline: fused vs unfused SC-MAC")
     roofline = analytic_roofline()
 
     write_json("BENCH_sc_matmul.json",
                {"tiny": tiny, "nbit": NBIT, "backends": results,
-                "roofline": roofline})
+                "fused_vs_bitexact": fused_cmp, "roofline": roofline})
 
 
 if __name__ == "__main__":

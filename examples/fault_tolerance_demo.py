@@ -11,7 +11,6 @@ import shutil
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.data import SyntheticLMData, make_batch

@@ -18,7 +18,6 @@ inspection.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterator
 
 from repro.arch.spec import ArraySpec, DEFAULT_SPEC

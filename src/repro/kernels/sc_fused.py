@@ -1,0 +1,198 @@
+"""Pallas TPU kernel: FULLY fused bit-exact SC matmul engine.
+
+``pallas_bitexact`` (kernels/sc_mul.py) realizes the paper's packed MUL
+faithfully but in three separate stages: the host encodes operands and
+materializes the whole per-product uniform stream (O(M·K·N·nbit/32)
+words through HBM), the kernel ANDs/pop-counts it, and the host reduces
+over K.  This kernel collapses all of it into ONE ``pallas_call``:
+
+* **operand-grid encoding** — tiles arrive as raw signed probabilities
+  ``v / max|v|``; the LUT/DTC-grid quantization (§III-A) and the fx16
+  bias-word conversion happen in-kernel, with bit-for-bit the formulas of
+  ``sc/encoding.py``;
+* **counter-based RNG draw** — every uniform word regenerates in-kernel
+  from ``sc/ctr_rng.py``'s pinned Threefry-2x32 stream keyed by the
+  *global* product coordinates, so the draw is independent of tile shape
+  and identical to the stream ``pallas_bitexact`` materializes on the
+  host (same key ⇒ same bits, whatever the autotuner picked);
+* **MTJ write-probability thresholding** — the Horner bit-ladder of
+  ``kernels/sc_mul.py`` turns uniform words into packed Bernoulli cells,
+  32 per lane word (the row-parallel stochastic write);
+* **pop-count accumulation** — two-pulse AND + SWAR pop-count, then a
+  *signed integer* accumulation over the K grid axis in a VMEM scratch
+  accumulator.
+
+The bitstreams therefore never leave VMEM/registers — the in-situ-storage
+property of the MRAM array mapped all the way down.  Integer accumulation
+makes the result exactly associative, so the output is invariant to the
+(block_m, block_n, block_k, lane_words) tiling: the autotuner may pick
+any config without perturbing a single bit.  (Capacity notes: flat
+product indices address 2^32 MULs per call and the signed per-output
+accumulator holds |K·nbit| < 2^31 — both far beyond the validation
+scales an O(M·K·N·nbit) engine can run at.)
+
+Two key modes, one kernel: per-call mode (one key, product index spans
+the whole (M, K, N) grid) and per-row mode (one key per output row, row
+term dropped from the product index) — the latter makes each row's bits
+a function of its own key alone, which is what the continuous-batching
+serve engine needs (`models/layers.py:_dense_rows`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sc_mul import LANE_BITS, NSLICES, popcount32
+from repro.sc import ctr_rng, encoding
+
+
+def encode_fx16(p, levels: int, quantize: bool):
+    """|probability| tile -> fx16 bias words, THE host encoding in-kernel.
+
+    Calls the selfsame ``sc/encoding.py`` helpers the packed path uses
+    (both are pure jnp, hence kernel-safe), so in-kernel encoding equals
+    the host encoding bit-for-bit by construction — one source of truth
+    for the clamped grid round (the PR-4 off-by-one territory) and the
+    16-bit ladder conversion.
+    """
+    if quantize:
+        p = encoding.quantize_grid(p, levels)
+    return encoding.to_fx16(p)
+
+
+def _sc_fused_kernel(keys_ref, x_ref, w_ref, out_ref, acc_ref, *,
+                     n_orig: int, row_stride: int, nbit: int, levels: int,
+                     quantize: bool, nk: int, lane_words: int):
+    """One (bm, bn) output tile, one K step: draw, AND, pop-count, add.
+
+    keys: (bm, 4) per-row raw threefry keys [kx0, kx1, ky0, ky1];
+    x: (bm, bk) / w: (bk, bn) signed probabilities in [-1, 1];
+    acc: (bm, bn) int32 signed pop-count accumulator (VMEM scratch).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    spx = x_ref[...]                       # (bm, bk)
+    spw = w_ref[...]                       # (bk, bn)
+    bm, bk = spx.shape
+    bn = spw.shape[1]
+    nwords = nbit // LANE_BITS
+
+    # in-kernel operand-grid encoding (sign beside magnitude, SC practice)
+    fxx = encode_fx16(jnp.abs(spx), levels, quantize)      # (bm, bk) u32
+    fxw = encode_fx16(jnp.abs(spw), levels, quantize)      # (bk, bn) u32
+    sgx = jnp.sign(spx).astype(jnp.int32)
+    sgw = jnp.sign(spw).astype(jnp.int32)
+
+    # global product coordinates -> the pinned ctr_rng counter c0
+    shape3 = (bm, bk, bn)
+    gi = (pl.program_id(0) * bm
+          + jax.lax.broadcasted_iota(jnp.uint32, shape3, 0))
+    gk = (pl.program_id(2) * bk
+          + jax.lax.broadcasted_iota(jnp.uint32, shape3, 1))
+    gj = (pl.program_id(1) * bn
+          + jax.lax.broadcasted_iota(jnp.uint32, shape3, 2))
+    pid = (gi * jnp.uint32(row_stride) + gk * jnp.uint32(n_orig) + gj)
+
+    kx0 = keys_ref[:, 0][:, None, None, None]
+    kx1 = keys_ref[:, 1][:, None, None, None]
+    ky0 = keys_ref[:, 2][:, None, None, None]
+    ky1 = keys_ref[:, 3][:, None, None, None]
+    c0 = pid[..., None]                    # (bm, bk, bn, 1)
+    px4 = fxx[:, :, None, None]
+    pw4 = fxw[None, :, :, None]
+
+    counts = jnp.zeros(shape3, jnp.int32)
+    for w0 in range(0, nwords, lane_words):
+        wc = min(lane_words, nwords - w0)
+        widx = (jnp.uint32(w0)
+                + jax.lax.broadcasted_iota(jnp.uint32, (wc,), 0))
+        tx = jnp.zeros(shape3 + (wc,), jnp.uint32)
+        ty = jnp.zeros(shape3 + (wc,), jnp.uint32)
+        for s in range(NSLICES):           # LSB -> MSB Horner bit-ladder
+            c1 = (jnp.uint32(s * nwords) + widx)[None, None, None, :]
+            ux = ctr_rng.threefry2x32(kx0, kx1, c0, c1)[0]
+            uy = ctr_rng.threefry2x32(ky0, ky1, c0, c1)[0]
+            mx = jnp.uint32(0) - ((px4 >> jnp.uint32(s)) & jnp.uint32(1))
+            my = jnp.uint32(0) - ((pw4 >> jnp.uint32(s)) & jnp.uint32(1))
+            tx = (mx & (ux | tx)) | (~mx & (ux & tx))
+            ty = (my & (uy | ty)) | (~my & (uy & ty))
+        survived = tx & ty                 # two-pulse AND (paper Fig. 5)
+        counts += jnp.sum(popcount32(survived).astype(jnp.int32), axis=-1)
+
+    signed = sgx[:, :, None] * sgw[None, :, :] * counts
+    acc_ref[...] += jnp.sum(signed, axis=1)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _emit():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_orig", "n_orig", "nbit", "levels", "quantize",
+                     "block_m", "block_n", "block_k", "lane_words",
+                     "row_keys", "interpret"))
+def sc_fused_popcount(keys, x_signed_p, w_signed_p, *, k_orig: int,
+                      n_orig: int, nbit: int, levels: int,
+                      quantize: bool = True, block_m: int = 8,
+                      block_n: int = 8, block_k: int = 32,
+                      lane_words: int = 16, row_keys: bool = False,
+                      interpret: bool = True):
+    """Fused SC matmul -> (M, N) int32 signed pop-count totals.
+
+    keys: (M, 4) uint32 per-row raw key words [kx0, kx1, ky0, ky1] (the
+    caller broadcasts one row in per-call mode); x/w: block-multiple
+    signed probabilities.  ``k_orig`` / ``n_orig`` are the UNPADDED
+    contraction/output widths — they define the flat product index, so
+    padding never shifts a real product's stochastic draw.  With
+    ``row_keys=True`` the row term drops out of the product index and
+    every output row draws from its own key's stream.  The caller turns
+    totals into the SC estimate via ``total / nbit · scale_x·scale_w``.
+    """
+    m, k = x_signed_p.shape
+    k2, n = w_signed_p.shape
+    assert k == k2 and keys.shape == (m, 4)
+    assert nbit % LANE_BITS == 0, "fused engine packs 32 cells per word"
+    assert k * nbit < 2 ** 31, \
+        "signed int32 accumulator needs K*nbit < 2^31"
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    row_stride = 0 if row_keys else (k_orig * n_orig) & 0xFFFFFFFF
+    kernel = functools.partial(
+        _sc_fused_kernel, n_orig=n_orig, row_stride=row_stride, nbit=nbit,
+        levels=levels, quantize=quantize, nk=nk,
+        lane_words=min(lane_words, max(1, nbit // LANE_BITS)))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, 4), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[_vmem_i32(bm, bn)],
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(keys, x_signed_p, w_signed_p)
+
+
+def _vmem_i32(bm, bn):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM((bm, bn), jnp.int32)
+
+
+def _tpu_params():
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams")
+    return cls(dimension_semantics=("parallel", "parallel", "arbitrary"))

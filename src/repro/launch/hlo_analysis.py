@@ -479,7 +479,6 @@ def model_flops_estimate(cfg, shape) -> float:
 
 
 def _spec_leaves_with_paths(cfg):
-    import jax
     from repro.models import lm as lm_mod
     from repro.models.params import ParamSpec
     specs = lm_mod.lm_param_specs(cfg)

@@ -46,12 +46,14 @@ def _dense_rows(keys, x, w, sc_cfg):
     its max-abs encoding scale) from ``keys[i]`` ALONE, so each row's
     output is independent of its batch neighbours — the property the
     continuous-batching serve engine relies on (same request + same key
-    => same values whatever shares the batch)."""
+    => same values whatever shares the batch).  Routed through
+    ``sc.sc_dot_rows``: backends with a native batched rows path
+    (``pallas_fused``) run one kernel launch, the rest vmap."""
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     kf = keys.reshape(-1, keys.shape[-1])
     w32 = w.astype(jnp.float32)
-    yf = jax.vmap(lambda k, xr: sc.sc_dot(k, xr, w32, sc_cfg))(kf, xf)
+    yf = sc.sc_dot_rows(kf, xf, w32, sc_cfg)
     return yf.reshape(*lead, w.shape[-1]).astype(x.dtype)
 
 
@@ -74,10 +76,16 @@ def dense(x, w, cfg, key=None, bias=None):
     if cfg.sc_backend == "exact" or key is None:
         y = jnp.dot(x, w.astype(x.dtype))
     elif key.ndim > 1:
-        sc_cfg = sc.ScConfig(backend=cfg.sc_backend, nbit=cfg.sc_nbit)
+        # fast_backend upgrades pallas_bitexact to the bit-identical
+        # fused engine — same key, same bits, one kernel launch
+        sc_cfg = sc.ScConfig(
+            backend=sc.fast_backend(cfg.sc_backend, cfg.sc_nbit),
+            nbit=cfg.sc_nbit)
         y = _dense_rows(key, x, w, sc_cfg)
     else:
-        sc_cfg = sc.ScConfig(backend=cfg.sc_backend, nbit=cfg.sc_nbit)
+        sc_cfg = sc.ScConfig(
+            backend=sc.fast_backend(cfg.sc_backend, cfg.sc_nbit),
+            nbit=cfg.sc_nbit)
         scope = sc.active_mesh()
         if scope is not None:
             mesh, rules = scope

@@ -7,11 +7,16 @@ package is the software analogue: ONE operation interface
 
 with interchangeable array-level implementations behind a registry
 (``exact``, ``moment``, ``bitexact``, ``pallas_moment``,
-``pallas_bitexact``, plus the lazily-registered ``array`` architecture
-simulator from :mod:`repro.arch`), one canonical operand encoding, and the
-straight-through gradient applied once at the dispatch boundary so every
-backend is trainable. The model stack (models/layers.py:dense), the
-serving engine, the trainer, and the benchmarks all route here.
+``pallas_bitexact``, ``pallas_fused``, plus the lazily-registered
+``array`` architecture simulator from :mod:`repro.arch`), one canonical
+operand encoding, and the straight-through gradient applied once at the
+dispatch boundary so every backend is trainable. The model stack
+(models/layers.py:dense), the serving engine, the trainer, and the
+benchmarks all route here.  ``sc_dot_rows`` is the per-row-key variant
+(one key per output row — the serve engine's batch-invariance path), and
+``fast_backend`` resolves a backend name to its bit-identical fast path
+(``pallas_bitexact`` -> ``pallas_fused``, same counter-based stream from
+:mod:`repro.sc.ctr_rng`, tiles from :mod:`repro.sc.autotune`).
 
 Scale-out lives in :mod:`repro.sc.sharded`: ``sc_dot_sharded`` splits one
 contraction across a JAX device mesh (batch rows over the data axes,
@@ -23,9 +28,12 @@ Public API (see ``docs/backends.md`` for the selection guide):
 
 * :class:`~repro.sc.config.ScConfig` — one frozen config per substrate.
 * :func:`~repro.sc.registry.sc_dot` — the dispatch entry point.
+* :func:`~repro.sc.registry.sc_dot_rows` — per-row-key dispatch.
 * :func:`~repro.sc.registry.register_backend` /
+  :func:`~repro.sc.registry.register_rows_backend` /
   :func:`~repro.sc.registry.get_backend` /
-  :func:`~repro.sc.registry.available_backends` — the registry hooks.
+  :func:`~repro.sc.registry.available_backends` /
+  :func:`~repro.sc.registry.fast_backend` — the registry hooks.
 * :func:`~repro.sc.sharded.sc_dot_sharded` /
   :func:`~repro.sc.sharded.use_mesh` /
   :class:`~repro.sc.sharded.ScShardRules` — the mesh-sharded path.
@@ -33,8 +41,11 @@ Public API (see ``docs/backends.md`` for the selection guide):
 
 from repro.sc.config import ScConfig                      # noqa: F401
 from repro.sc.registry import (                           # noqa: F401
-    available_backends, get_backend, register_backend, sc_dot)
+    available_backends, fast_backend, get_backend, register_backend,
+    register_rows_backend, sc_dot, sc_dot_rows)
+from repro.sc import autotune                             # noqa: F401
 from repro.sc import backends as _backends                # noqa: F401  (registers)
+from repro.sc import ctr_rng                              # noqa: F401
 from repro.sc import encoding                             # noqa: F401
 from repro.sc.sharded import (                            # noqa: F401
     DEFAULT_RULES, ScShardRules, active_mesh, current_shard_count,

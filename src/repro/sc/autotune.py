@@ -1,0 +1,236 @@
+"""Tile-size autotuner for the fused SC engine (``pallas_fused``).
+
+The fused kernel's wall-clock is dominated by how its (block_m, block_n,
+block_k, lane_words) tiling trades grid-step overhead against per-tile
+working-set size — and the best point depends on the call shape.  This
+module owns that choice:
+
+* a **versioned on-disk cache** (``autotune_cache.json``, shipped with
+  the repo) maps ``(M, K, N, nbit, dtype)`` to a measured-best
+  :class:`FusedTile`; ``tools/autotune.py`` refreshes it;
+* a **deterministic heuristic** (:func:`heuristic_tile`) answers cache
+  misses, so cold shapes still run with a sane tiling and the lookup is
+  a pure function of the call signature;
+* the tuner itself (:func:`tune_shape`) times candidate tiles through
+  the real kernel entry point.
+
+Crucially the tile choice can NEVER change results: the kernel draws
+every stochastic word from the global counter-based stream
+(``sc/ctr_rng.py``), so outputs are bitwise invariant to the tiling —
+the cache is a pure performance table, safe to regenerate on any
+machine (asserted in ``tests/test_sc_fused.py``).
+
+Cache format (``CACHE_VERSION`` bumps invalidate the whole file)::
+
+    {"version": 1,
+     "entries": {"8x32x8|nbit=1024|dtype=float32":
+                 {"block_m": 8, "block_n": 8, "block_k": 32,
+                  "lane_words": 16, "wall_us": 1234.5}}}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+CACHE_VERSION = 1
+DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(__file__),
+                                  "autotune_cache.json")
+_CACHE_ENV = "REPRO_SC_AUTOTUNE_CACHE"
+
+# per-tile uint32 working set cap (words): two Bernoulli word buffers of
+# bm*bk*bn*lane_words words each must stay VMEM-resident on a real TPU.
+_MAX_TILE_WORDS = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedTile:
+    """One fused-kernel tiling: matmul blocks + RNG words per inner pass.
+
+    ``lane_words`` packed 32-bit words (= 32·lane_words stochastic cells
+    per lane pass) are drawn per Horner-ladder sweep; smaller values
+    shrink the VMEM working set, larger values amortize sweep overhead.
+    """
+
+    block_m: int = 8
+    block_n: int = 8
+    block_k: int = 32
+    lane_words: int = 16
+
+    def kwargs(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def cache_key(m: int, k: int, n: int, nbit: int,
+              dtype: str = "float32") -> str:
+    return f"{m}x{k}x{n}|nbit={nbit}|dtype={dtype}"
+
+
+def load_cache(path: str | None = None) -> dict:
+    """Entries of the on-disk cache; {} when absent, invalid, or stale.
+
+    A ``version`` mismatch (``CACHE_VERSION`` bump) invalidates the whole
+    file — stale tables from older kernel generations are never applied.
+    """
+    path = path or os.environ.get(_CACHE_ENV) or DEFAULT_CACHE_PATH
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    if payload.get("version") != CACHE_VERSION:
+        return {}
+    entries = payload.get("entries")
+    return entries if isinstance(entries, dict) else {}
+
+
+def save_cache(entries: dict, path: str | None = None) -> str:
+    path = path or os.environ.get(_CACHE_ENV) or DEFAULT_CACHE_PATH
+    with open(path, "w") as f:
+        json.dump({"version": CACHE_VERSION, "entries": entries}, f,
+                  indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+_CACHE: dict | None = None
+
+
+def _cached_entries() -> dict:
+    global _CACHE
+    if _CACHE is None:
+        _CACHE = load_cache()
+    return _CACHE
+
+
+def reset_cache() -> None:
+    """Drop the in-process cache (tests / after tools/autotune.py runs)."""
+    global _CACHE
+    _CACHE = None
+
+
+def _pow2_cover(dim: int, cap: int) -> int:
+    """Smallest power of two >= dim, clamped to cap (operands pad up)."""
+    p = 1
+    while p < dim and p < cap:
+        p *= 2
+    return p
+
+
+def heuristic_tile(m: int, k: int, n: int, nbit: int) -> FusedTile:
+    """Deterministic cache-miss fallback: modest power-of-two blocks.
+
+    Small M/N tiles keep the cubic (bm, bk, bn, lane_words) Bernoulli
+    working set bounded; K gets the largest block the VMEM cap allows so
+    the integer accumulator loops as few grid steps as possible.
+    """
+    nwords = max(1, nbit // 32)
+    bm = _pow2_cover(m, 8)
+    bn = _pow2_cover(n, 8)
+    bk = _pow2_cover(k, 32)
+    lane = min(nwords, 16)
+    while bm * bn * bk * lane > _MAX_TILE_WORDS and lane > 1:
+        lane //= 2
+    while bm * bn * bk * lane > _MAX_TILE_WORDS and bk > 1:
+        bk //= 2
+    return FusedTile(block_m=bm, block_n=bn, block_k=bk, lane_words=lane)
+
+
+def get_tile(m: int, k: int, n: int, nbit: int, dtype: str = "float32",
+             cache: dict | None = None) -> FusedTile:
+    """Cache-then-heuristic lookup — THE tile the fused backend runs with.
+
+    Pure function of (shape, nbit, dtype, cache contents): a cache hit
+    returns the stored tile verbatim; a miss falls back to
+    :func:`heuristic_tile`.  Either way the kernel's outputs are
+    identical (tiling never changes the counter-based draw).
+    """
+    entries = cache if cache is not None else _cached_entries()
+    entry = entries.get(cache_key(m, k, n, nbit, dtype))
+    if entry is not None:
+        try:
+            tile = FusedTile(
+                block_m=int(entry["block_m"]), block_n=int(entry["block_n"]),
+                block_k=int(entry["block_k"]),
+                lane_words=int(entry["lane_words"]))
+            if min(dataclasses.astuple(tile)) >= 1:
+                return tile
+        except (KeyError, TypeError, ValueError):
+            pass                     # malformed entry -> heuristic
+    return heuristic_tile(m, k, n, nbit)
+
+
+def candidate_tiles(m: int, k: int, n: int, nbit: int) -> list:
+    """The tuner's search space for one call shape (heuristic included).
+
+    Deliberately small: each candidate pays a fresh kernel compile, and
+    tiny ``lane_words`` values are excluded outright — the Horner sweep
+    unrolls ``nwords / lane_words`` chunks, so small lanes inflate both
+    trace size (compile time) and per-step overhead.
+    """
+    nwords = max(1, nbit // 32)
+    cands = []
+    for bm in {_pow2_cover(m, c) for c in (4, 8, 16)}:
+        for bn in {_pow2_cover(n, c) for c in (4, 8, 16)}:
+            for bk in {_pow2_cover(k, c) for c in (16, 32, 64)}:
+                for lane in {min(nwords, c) for c in (16, 32)}:
+                    if bm * bn * bk * lane <= _MAX_TILE_WORDS:
+                        cands.append(FusedTile(bm, bn, bk, lane))
+    cands.append(heuristic_tile(m, k, n, nbit))
+    return sorted(set(cands), key=lambda t: dataclasses.astuple(t))
+
+
+def measure_tile(m: int, k: int, n: int, nbit: int, tile: FusedTile, *,
+                 operand_bits: int = 10, iters: int = 3,
+                 warmup: int = 1, seed: int = 0) -> float:
+    """Median wall-clock µs of the fused kernel under ``tile``."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import sc_fused
+    from repro.sc import ctr_rng, encoding
+
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kk = jax.random.split(key, 3)
+    x = jax.random.uniform(kx, (m, k), jnp.float32, -1.0, 1.0)
+    w = jax.random.uniform(kw, (k, n), jnp.float32, -1.0, 1.0)
+    kx2, ky2 = jax.random.split(kk)
+    xp = encoding.pad_to(encoding.pad_to(x, tile.block_m, 0), tile.block_k, 1)
+    wp = encoding.pad_to(encoding.pad_to(w, tile.block_k, 0), tile.block_n, 1)
+    keys = jnp.broadcast_to(
+        jnp.concatenate([ctr_rng.raw_key(kx2), ctr_rng.raw_key(ky2)])[None],
+        (xp.shape[0], 4))
+
+    def run():
+        return sc_fused.sc_fused_popcount(
+            keys, xp, wp, k_orig=k, n_orig=n, nbit=nbit,
+            levels=1 << operand_bits, quantize=True,
+            **tile.kwargs()).block_until_ready()
+
+    for _ in range(warmup):
+        run()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def tune_shape(m: int, k: int, n: int, nbit: int, *,
+               candidates: list | None = None, iters: int = 3,
+               verbose: bool = False) -> tuple:
+    """Time every candidate tile; returns ``(best_tile, best_us, table)``."""
+    cands = candidates if candidates is not None else candidate_tiles(
+        m, k, n, nbit)
+    table = []
+    for tile in cands:
+        us = measure_tile(m, k, n, nbit, tile, iters=iters)
+        table.append((tile, us))
+        if verbose:
+            print(f"  {dataclasses.astuple(tile)!s:<22} {us:10.1f} us")
+    best_tile, best_us = min(table, key=lambda tu: tu[1])
+    return best_tile, best_us, table

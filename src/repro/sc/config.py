@@ -20,9 +20,12 @@ class ScConfig:
     Attributes:
         backend: name of a backend in the ``repro.sc`` registry —
             one of ``exact | moment | bitexact | pallas_moment |
-            pallas_bitexact | array`` out of the box (see
+            pallas_bitexact | pallas_fused | array`` out of the box (see
             ``docs/backends.md`` for the trade-offs), or anything
             registered via :func:`repro.sc.register_backend`.
+            ``pallas_fused`` ignores the ``block_*`` tiles below and
+            takes its tiling from the autotune cache
+            (``repro.sc.autotune``; bitwise identical either way).
         nbit: stochastic bits per scalar product — the number of MRAM
             cells each MUL occupies (paper: 2**operand_bits).  Error
             std scales as 1/sqrt(nbit).

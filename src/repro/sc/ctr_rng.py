@@ -1,0 +1,111 @@
+"""Counter-based RNG shared by the bit-exact SC engines.
+
+The packed Pallas engine (``pallas_bitexact``) and the fused engine
+(``pallas_fused``) must draw the SAME stochastic bits from the same key —
+that is what makes the fused kernel a drop-in fast path (same key ⇒ same
+bits ⇒ bit-identical outputs).  ``jax.random.bits`` cannot provide that
+stream: its counter layout is an implementation detail of the host-side
+threefry lowering and is unavailable inside a Pallas kernel.  This module
+pins the stream explicitly instead:
+
+    word(key, c0, c1) = Threefry-2x32(key, (c0, c1))[0]
+
+with a documented counter layout (see :func:`product_counters`):
+
+    c0 = flat product index  (i·K + k)·N + j       — one MUL per (i, k, j)
+    c1 = s·nwords + w                              — Horner slice s, word w
+
+and the x/y operand streams separated by ``jax.random.split`` of the
+caller's key (exactly as ``pallas_bitexact`` always did).  Everything here
+is plain ``uint32`` jnp arithmetic, so the SAME function body runs on the
+host (building the packed engine's input stream) and inside a Pallas
+kernel (regenerating tiles of the stream in VMEM without ever
+materializing it) — bit equality holds by construction, not by testing
+two implementations against each other.
+
+Counter widths: ``c0`` is one 32-bit word, so the bit-exact family
+addresses at most 2^32 scalar products per call — far beyond the
+validation scales the O(M·K·N·nbit) engines can run at anyway.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Threefry-2x32 constants (Salmon et al., SC'11): 20 rounds = 5 groups of
+# 4, rotation schedule alternating between the two quartets, key words
+# re-injected after every group with the round-group counter.
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = 0x1BD11BDA
+
+
+def _rotl(x, d: int):
+    return (x << jnp.uint32(d)) | (x >> jnp.uint32(32 - d))
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """Threefry-2x32 (20 rounds) on uint32 arrays; returns ``(x0, x1)``.
+
+    All four arguments broadcast against each other, so a scalar key pair
+    against an array of counters evaluates the whole counter block in one
+    vectorized pass — on the host or inside a Pallas kernel alike.
+    """
+    k0 = jnp.asarray(k0, jnp.uint32)
+    k1 = jnp.asarray(k1, jnp.uint32)
+    ks2 = k0 ^ k1 ^ jnp.uint32(_PARITY)
+    ks = (k0, k1, ks2)
+    x0 = jnp.asarray(c0, jnp.uint32) + k0
+    x1 = jnp.asarray(c1, jnp.uint32) + k1
+    for group in range(5):
+        for rot in _ROTATIONS[group % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, rot)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(group + 1) % 3]
+        x1 = x1 + ks[(group + 2) % 3] + jnp.uint32(group + 1)
+    return x0, x1
+
+
+def uniform_words(key2, c0, c1):
+    """One iid-uniform uint32 word per counter pair (first threefry lane).
+
+    ``key2`` is a raw ``(2,)`` uint32 key (``raw_key`` normalizes typed
+    keys); ``c0`` / ``c1`` are broadcastable uint32 counter arrays.
+    """
+    return threefry2x32(key2[0], key2[1], c0, c1)[0]
+
+
+def raw_key(key):
+    """Normalize a PRNG key to its raw ``(..., 2)`` uint32 key data."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.astype(jnp.uint32)
+
+
+def product_counters(n_products: int, nwords: int):
+    """The pinned (c0, c1) layout of one operand's per-product stream.
+
+    Returns ``c0`` of shape ``(n_products, 1, 1)`` (flat product index)
+    and ``c1`` of shape ``(1, NSLICES, nwords)`` (``s·nwords + w``), ready
+    to broadcast into :func:`uniform_words` to produce the
+    ``(n_products, NSLICES, nwords)`` uniform block the packed engine
+    consumes.  The fused kernel computes the same two counters from its
+    grid coordinates and draws only its own tile.
+    """
+    from repro.kernels.sc_mul import NSLICES
+
+    c0 = jnp.arange(n_products, dtype=jnp.uint32)[:, None, None]
+    c1 = (jnp.arange(NSLICES, dtype=jnp.uint32)[:, None] * jnp.uint32(nwords)
+          + jnp.arange(nwords, dtype=jnp.uint32)[None, :])[None]
+    return c0, c1
+
+
+def operand_stream(key2, n_products: int, nwords: int):
+    """Host-side materialization: ``(n_products, NSLICES, nwords)`` words.
+
+    This is exactly the stream ``pallas_bitexact`` feeds its packed
+    kernel; ``pallas_fused`` regenerates the same words tile-locally.
+    """
+    c0, c1 = product_counters(n_products, nwords)
+    return uniform_words(key2, c0, c1)

@@ -41,9 +41,19 @@ def encode(v, cfg):
     scale = jnp.maximum(jnp.max(jnp.abs(v)), 1e-30)
     p = jnp.abs(v) / scale
     if cfg.quantize:
-        levels = 1 << cfg.operand_bits
-        p = jnp.clip(jnp.round(p * levels), 0, levels - 1) / levels
+        p = quantize_grid(p, 1 << cfg.operand_bits)
     return jnp.sign(v), p, scale
+
+
+def quantize_grid(p, levels: int):
+    """Snap probabilities onto the paper's n-bit LUT/DTC operand grid.
+
+    The clamped round described in :func:`encode` — THE single source of
+    the grid formula: the host encoding above and the fused Pallas
+    kernel's in-kernel encoding (``kernels/sc_fused.py``) both call this,
+    which is what keeps their fx16 bias words bit-identical.
+    """
+    return jnp.clip(jnp.round(p * levels), 0, levels - 1) / levels
 
 
 def decode(sign, p, scale):

@@ -36,6 +36,16 @@ _BACKENDS: dict = {}
 # ScConfig(backend="array") still works with no explicit import.
 _LAZY_BACKENDS: dict = {"array": "repro.arch.backend"}
 
+# Optional batched per-row-key implementations: name -> fn(keys, x2d, w,
+# cfg) with keys (M, 2).  Backends without one fall back to a vmap of the
+# single-key path in ``sc_dot_rows``.
+_ROW_BACKENDS: dict = {}
+
+# name -> bit-identical faster backend.  ``fast_backend`` (consulted by
+# models/layers.py:dense) upgrades through this map; entries are only
+# valid when the two backends provably produce the same bits per key.
+_FAST_ALIASES: dict = {"pallas_bitexact": "pallas_fused"}
+
 
 def register_backend(name: str):
     """Decorator: register an SC matmul backend under ``name``.
@@ -74,6 +84,37 @@ def get_backend(name: str):
 def available_backends() -> tuple:
     """Sorted names of every selectable backend (lazy ones included)."""
     return tuple(sorted(set(_BACKENDS) | set(_LAZY_BACKENDS)))
+
+
+def register_rows_backend(name: str):
+    """Decorator: register a batched per-row-key path for backend ``name``.
+
+    The decorated function must have signature
+    ``fn(keys, x2d, w, cfg) -> y2d`` with ``keys: (M, 2)`` raw uint32
+    keys and ``x2d: (M, K)``; row i must depend on ``keys[i]`` / ``x[i]``
+    only and match the single-key backend called on that row alone —
+    ``sc_dot_rows`` uses it in place of a per-row vmap.
+    """
+    def deco(fn):
+        _ROW_BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def fast_backend(name: str, nbit: int | None = None) -> str:
+    """Resolve ``name`` to its bit-identical fast path, if one exists.
+
+    ``pallas_bitexact`` upgrades to ``pallas_fused`` (same counter-based
+    stream, same bits per key — asserted in tests/test_sc_fused.py);
+    every other name returns unchanged.  ``nbit`` guards upgrades whose
+    target needs a packed word multiple.
+    """
+    fast = _FAST_ALIASES.get(name)
+    if fast is None:
+        return name
+    if nbit is not None and nbit % 32 != 0:
+        return name
+    return fast
 
 
 def _dispatch(key, x, w, cfg: ScConfig):
@@ -118,3 +159,55 @@ def _sc_dot_bwd(cfg, res, g):
 
 
 sc_dot.defvjp(_sc_dot_fwd, _sc_dot_bwd)
+
+
+def _dispatch_rows(keys, x, w, cfg: ScConfig):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    k2 = keys.reshape(-1, keys.shape[-1])
+    fn = _ROW_BACKENDS.get(cfg.backend)
+    if fn is not None:
+        y = fn(k2, x2, w, cfg)
+    else:
+        base = get_backend(cfg.backend)
+        y = jax.vmap(lambda kk, xr: base(kk, xr[None, :], w, cfg)[0])(k2, x2)
+    return y.reshape(*lead, w.shape[-1])
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def sc_dot_rows(keys, x, w, cfg: ScConfig = ScConfig()):
+    """``x @ w`` with PER-ROW keys: row i draws from ``keys[i]`` alone.
+
+    Args:
+        keys: (..., 2) raw PRNG keys, leading dims matching ``x``'s — one
+            key per row of the flattened row dimension.
+        x: (..., K) float operand; leading dims flatten to the row dim.
+        w: (K, N) float operand.
+        cfg: the substrate config (static under ``jit``).
+
+    Row i's output (stochastic bits AND encoding scale) is a function of
+    ``(keys[i], x[i], w)`` only and equals
+    ``sc_dot(keys[i], x[i:i+1], w, cfg)`` — the batch-composition
+    invariance the continuous-batching serve engine relies on.  Backends
+    registered via :func:`register_rows_backend` (``pallas_fused``) run
+    the whole batch in one kernel launch; the rest fall back to a vmap of
+    the single-key path.  The gradient is the same straight-through
+    exact-product jacobian as :func:`sc_dot`.
+    """
+    return _dispatch_rows(keys, x, w, cfg)
+
+
+def _sc_dot_rows_fwd(keys, x, w, cfg):
+    return _dispatch_rows(keys, x, w, cfg), (x, w)
+
+
+def _sc_dot_rows_bwd(cfg, res, g):
+    x, w = res
+    gx = jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    gw = jnp.dot(
+        x.reshape(-1, x.shape[-1]).T, g.reshape(-1, g.shape[-1]),
+        preferred_element_type=jnp.float32).astype(w.dtype)
+    return None, gx, gw
+
+
+sc_dot_rows.defvjp(_sc_dot_rows_fwd, _sc_dot_rows_bwd)

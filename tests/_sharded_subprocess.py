@@ -29,7 +29,7 @@ mesh81 = jax.make_mesh((8, 1), ("data", "model"))
 # drops everything and the sharded entry point must reproduce single-device
 # sc_dot bit-for-bit with the same key.
 trivial = sc.ScShardRules(batch=("data",), contract=())
-for backend in ("moment", "bitexact"):
+for backend in ("moment", "bitexact", "pallas_fused"):
     cfg = sc.ScConfig(backend=backend, nbit=512)
     y_ref = sc.sc_dot(key, x, w, cfg)
     y_sh = sc.sc_dot_sharded(key, x, w, cfg, mesh=mesh18, rules=trivial)
@@ -53,6 +53,20 @@ yb = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_b, mesh=mesh24))
 yb2 = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_b, mesh=mesh24))
 np.testing.assert_array_equal(yb, yb2)
 assert np.max(np.abs(yb - exact)) < 1.0
+
+# --- pallas_fused shards and stays bit-identical to pallas_bitexact ------
+# Every shard folds the same key, sees the same local operand block, and
+# draws the same counter-based stream in both engines, so the psum-merged
+# outputs agree bit-for-bit even across a real 2x4 mesh split.
+cfg_f = sc.ScConfig(backend="pallas_fused", nbit=64)
+yf = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_f, mesh=mesh24))
+yf2 = np.asarray(sc.sc_dot_sharded(key, x, w, cfg_f, mesh=mesh24))
+np.testing.assert_array_equal(yf, yf2)
+yp = np.asarray(sc.sc_dot_sharded(
+    key, x, w, sc.ScConfig(backend="pallas_bitexact", nbit=64),
+    mesh=mesh24))
+np.testing.assert_array_equal(yf, yp)
+assert np.max(np.abs(yf - exact)) < 4.0
 
 # --- STE gradients ride through the psum merge ---------------------------
 def loss(x, w):

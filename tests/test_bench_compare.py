@@ -1,0 +1,148 @@
+"""The benchmark-regression gate: injected regressions must exit nonzero,
+matching artifacts must pass, and the tolerance classes must hold."""
+
+import copy
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import bench_compare  # noqa: E402
+
+BASE = {
+    "tiny": True,
+    "nbit": 1024,
+    "backends": {
+        "exact": {"shape": [32, 128, 32], "wall_us": 900.0,
+                  "array_cycles": 512, "note": "plain XLA matmul"},
+        "pallas_fused": {"shape": [4, 16, 4], "wall_us": 2400.0,
+                         "array_cycles": 8, "note": "74x exact"},
+    },
+    "fused_vs_bitexact": {"shape": [4, 16, 4], "bit_exact": True,
+                          "speedup": 73.7, "floor": 0.8},
+    "workload": {"mean_interarrival_s": 0.02, "requests": 24},
+    "paged": {"ticks": 17, "evictions": 0},
+}
+
+
+def _errors(current, **kw):
+    return bench_compare.compare_payloads("BENCH_test.json", BASE, current,
+                                          **kw)
+
+
+def test_identical_payload_passes():
+    assert _errors(copy.deepcopy(BASE)) == []
+
+
+def test_wall_clock_noise_tolerated_but_blowup_fails():
+    cur = copy.deepcopy(BASE)
+    cur["backends"]["exact"]["wall_us"] = 900.0 * 5    # CI noise: fine
+    assert _errors(cur) == []
+    cur["backends"]["exact"]["wall_us"] = 900.0 * 50   # complexity blowup
+    errs = _errors(cur)
+    assert len(errs) == 1 and "wall_us" in errs[0]
+    assert "wall-clock regression" in errs[0]
+
+
+def test_deterministic_metric_change_fails():
+    cur = copy.deepcopy(BASE)
+    cur["backends"]["pallas_fused"]["array_cycles"] = 16
+    errs = _errors(cur)
+    assert len(errs) == 1
+    assert "array_cycles" in errs[0] and "deterministic" in errs[0]
+
+
+def test_bit_exact_flag_flip_fails():
+    cur = copy.deepcopy(BASE)
+    cur["fused_vs_bitexact"]["bit_exact"] = False
+    errs = _errors(cur)
+    assert len(errs) == 1 and "bit_exact" in errs[0]
+
+
+def test_speedup_collapse_fails_but_drift_passes():
+    cur = copy.deepcopy(BASE)
+    cur["fused_vs_bitexact"]["speedup"] = 30.0         # drift: fine
+    assert _errors(cur) == []
+    cur["fused_vs_bitexact"]["speedup"] = 1.2          # collapse
+    errs = _errors(cur)
+    assert len(errs) == 1 and "speedup" in errs[0]
+
+
+def test_missing_metric_is_a_regression():
+    cur = copy.deepcopy(BASE)
+    del cur["backends"]["pallas_fused"]                # backend vanished
+    errs = _errors(cur)
+    assert errs and all("missing from the fresh run" in e for e in errs)
+
+
+def test_scheduler_counts_tolerate_runner_speed_but_not_blowups():
+    """ticks/evictions are wall-clock-paced: runner-speed drift (both
+    directions, including evictions appearing over a 0 baseline) passes;
+    an order-of-magnitude blowup fails."""
+    cur = copy.deepcopy(BASE)
+    cur["paged"]["ticks"] = 9            # faster runner: fine
+    cur["paged"]["evictions"] = 2        # a couple timing evictions: fine
+    assert _errors(cur) == []
+    cur["paged"]["ticks"] = 17 * 40      # scheduler thrash
+    errs = _errors(cur)
+    assert len(errs) == 1 and "ticks" in errs[0] and "blew up" in errs[0]
+
+
+def test_workload_config_is_compared_exactly():
+    """Timing suffixes inside the workload/ subtree are CONFIG, not
+    measurement: quietly densifying arrivals must fail the gate even
+    though `_s`-suffixed wall metrics normally get a 20x band."""
+    cur = copy.deepcopy(BASE)
+    cur["workload"]["mean_interarrival_s"] = 0.005
+    errs = _errors(cur)
+    assert len(errs) == 1 and "mean_interarrival_s" in errs[0]
+    assert "deterministic" in errs[0]
+
+
+def test_notes_are_ignored():
+    cur = copy.deepcopy(BASE)
+    cur["backends"]["exact"]["note"] = "different measured ratio text"
+    assert _errors(cur) == []
+
+
+def test_main_exits_nonzero_on_injected_regression(tmp_path):
+    """End-to-end CLI: a regressed artifact makes main() return 1 and a
+    clear message naming the metric; the clean artifact returns 0."""
+    basedir = tmp_path / "baselines"
+    curdir = tmp_path / "fresh"
+    basedir.mkdir()
+    curdir.mkdir()
+    (basedir / "BENCH_x.json").write_text(json.dumps(BASE))
+    (curdir / "BENCH_x.json").write_text(json.dumps(BASE))
+    assert bench_compare.main(["--baseline-dir", str(basedir),
+                               "--current-dir", str(curdir)]) == 0
+    bad = copy.deepcopy(BASE)
+    bad["backends"]["pallas_fused"]["array_cycles"] = 9999   # injected
+    (curdir / "BENCH_x.json").write_text(json.dumps(bad))
+    assert bench_compare.main(["--baseline-dir", str(basedir),
+                               "--current-dir", str(curdir)]) == 1
+
+
+def test_main_fails_when_fresh_artifact_missing(tmp_path):
+    basedir = tmp_path / "baselines"
+    basedir.mkdir()
+    (basedir / "BENCH_x.json").write_text(json.dumps(BASE))
+    assert bench_compare.main(["--baseline-dir", str(basedir),
+                               "--current-dir", str(tmp_path)]) == 1
+
+
+def test_repo_baselines_match_committed_schema():
+    """The committed baselines parse and carry the mode flag the smoke job
+    relies on: CI compares --tiny runs, so any baseline that records a
+    mode must record tiny=True (a full-size refresh here would fail every
+    smoke run on shape/nbit mismatches)."""
+    bdir = bench_compare.DEFAULT_BASELINE_DIR
+    names = [p for p in os.listdir(bdir) if p.startswith("BENCH_")]
+    assert names, "benchmarks/baselines/ must ship refreshed baselines"
+    for name in names:
+        with open(os.path.join(bdir, name)) as f:
+            payload = json.load(f)
+        assert isinstance(payload, dict) and payload
+        assert payload.get("tiny", True) is True, (
+            f"{name}: baselines must come from --tiny runs"
+        )

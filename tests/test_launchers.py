@@ -1,6 +1,5 @@
 """Entrypoint tests: the production launchers run end-to-end on CPU."""
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import serve as serve_launch

@@ -13,7 +13,7 @@ from repro.kernels import ops
 from repro.models import layers, lm, params as P
 
 ALL_BACKENDS = ("exact", "moment", "bitexact", "pallas_moment",
-                "pallas_bitexact")
+                "pallas_bitexact", "pallas_fused")
 # small, block-aligned shape every backend (incl. O(M·K·N·nbit) ones) can run
 _CFG = dict(nbit=256, block_m=8, block_n=8, block_k=32)
 
@@ -25,7 +25,7 @@ def _xw(key, m=8, k=32, n=8):
     return x, w
 
 
-def test_all_five_backends_registered():
+def test_all_core_backends_registered():
     assert set(ALL_BACKENDS) <= set(sc.available_backends())
 
 
@@ -50,7 +50,7 @@ def test_registry_round_trip(key, backend):
 
 @pytest.mark.parametrize("backend",
                          ["moment", "bitexact", "pallas_moment",
-                          "pallas_bitexact"])
+                          "pallas_bitexact", "pallas_fused"])
 def test_backends_agree_with_exact_in_expectation(key, backend):
     """All stochastic backends estimate x @ w with zero-centered error."""
     x, w = _xw(key, m=4, k=32, n=4)

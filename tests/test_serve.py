@@ -2,7 +2,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import lm, params as P

@@ -4,14 +4,12 @@ framework loop (train -> checkpoint -> restore -> serve)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_smoke_config, supported_shapes
-from repro.core import conversion, engine
+from repro.core import engine
 from repro.data import SyntheticLMData, make_batch
 from repro.distributed import compression
 from repro.ft import Supervisor
-from repro.models import lm
 from repro.serve import Request, ServeConfig, ServingEngine
 from repro.train import TrainConfig, make_train_step
 from repro.train.step import train_state_init

@@ -1,0 +1,99 @@
+"""Refresh the fused SC engine's tile-size autotune cache.
+
+Times every candidate (block_m, block_n, block_k, lane_words) tiling of
+``kernels/sc_fused.py`` for the requested call shapes and writes the
+winners to the versioned on-disk table the ``pallas_fused`` backend
+consults (``src/repro/sc/autotune_cache.json`` by default — shipped with
+the repo so everyone starts from measured tiles).
+
+    PYTHONPATH=src python tools/autotune.py                  # bench shapes
+    PYTHONPATH=src python tools/autotune.py --shapes 8x32x8 16x64x16 \
+        --nbit 1024 --out /tmp/cache.json
+
+Tile choice never changes results (the kernel draws from a global
+counter-based stream), so the cache is safe to regenerate on any machine;
+it only moves wall-clock.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.sc import autotune
+
+# default shape set: the sc_matmul_bench bit-exact-family shapes
+# (full-size and --tiny)
+DEFAULT_SHAPES = ["8x32x8", "4x16x4"]
+
+
+def parse_shape(s: str) -> tuple:
+    try:
+        m, k, n = (int(v) for v in s.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"bad shape {s!r}; expected MxKxN, e.g. 8x32x8")
+    return m, k, n
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--shapes",
+        nargs="+",
+        default=DEFAULT_SHAPES,
+        metavar="MxKxN",
+        help="call shapes to tune",
+    )
+    ap.add_argument(
+        "--nbit",
+        type=int,
+        nargs="+",
+        default=[1024],
+        help="stochastic bits per product (multiple of 32)",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="cache file (default: the shipped table, or "
+        "$REPRO_SC_AUTOTUNE_CACHE)",
+    )
+    ap.add_argument(
+        "--iters",
+        type=int,
+        default=3,
+        help="timing repetitions per candidate",
+    )
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    entries = autotune.load_cache(args.out)
+    for shape in args.shapes:
+        m, k, n = parse_shape(shape)
+        for nbit in args.nbit:
+            if nbit % 32:
+                raise SystemExit(f"--nbit {nbit} is not a multiple of 32")
+            n_cands = len(autotune.candidate_tiles(m, k, n, nbit))
+            print(f"tuning {m}x{k}x{n} nbit={nbit} ({n_cands} candidates)")
+            best, best_us, table = autotune.tune_shape(
+                m, k, n, nbit, iters=args.iters, verbose=not args.quiet
+            )
+            heur = autotune.heuristic_tile(m, k, n, nbit)
+            heur_us = dict(table).get(heur, float("nan"))
+            print(
+                f"  best {best.kwargs()} at {best_us:.1f} us "
+                f"(heuristic {heur.kwargs()} at {heur_us:.1f} us)"
+            )
+            entry = dict(best.kwargs())
+            entry["wall_us"] = round(best_us, 1)
+            entries[autotune.cache_key(m, k, n, nbit)] = entry
+    path = autotune.save_cache(entries, args.out)
+    autotune.reset_cache()
+    print(
+        f"[wrote {path}: {len(entries)} entries, "
+        f"version {autotune.CACHE_VERSION}]"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

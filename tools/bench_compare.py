@@ -1,0 +1,245 @@
+"""Benchmark-regression gate: diff fresh BENCH_*.json against baselines.
+
+The benches have always written machine-readable artifacts; this tool is
+what finally *reads* them in CI.  It compares every metric in the
+committed baselines (``benchmarks/baselines/``) against the freshly
+produced files and exits nonzero naming each regressed metric, so a PR
+that slows the hot path or silently drops a backend fails the smoke job
+instead of shipping.
+
+    PYTHONPATH=src python tools/bench_compare.py            # after benches
+    python tools/bench_compare.py --baseline-dir benchmarks/baselines \
+        --current-dir . --files BENCH_sc_matmul.json
+
+Per-metric tolerance classes (suffix-matched on the leaf key):
+
+* ``note``                — free-text, ignored (embeds measured ratios);
+* ``*_us`` / ``*_s``      — wall-clock, lower is better: fail only past
+                            ``--wall-tolerance``x the baseline (default
+                            20x — catches accidental complexity blowups,
+                            not shared-CI-runner noise);
+* ``*speedup*`` / ``*tokens_per_s`` — higher is better: fail below
+                            ``--ratio-floor``x baseline (default 0.1x);
+* ``generated_tokens`` / ``ticks`` / ``evictions`` — scheduling counts
+                            driven by real time (the serve bench paces
+                            arrivals with the wall clock), so they get
+                            the wall treatment: fail only on a blowup
+                            past ``wall_tolerance x baseline + 5``
+                            (additive slack covers zero baselines);
+* ``workload/...``        — benchmark *configuration*: exact regardless
+                            of suffix (a changed workload is a changed
+                            benchmark, not a measurement);
+* everything else         — deterministic (modeled cycles/energy, shapes,
+                            nbit, flags): exact, to float round-off.
+
+A metric present in the baseline but MISSING from the fresh run is a
+regression (a backend or section silently vanished); new metrics in the
+fresh run are fine (baselines refresh when benches grow).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
+
+WALL_TOLERANCE = 20.0  # x baseline for *_us / *_s metrics
+RATIO_FLOOR = 0.1  # x baseline for speedup / throughput metrics
+COUNT_SLACK = 5.0  # additive slack for scheduler counts (0 baselines)
+EXACT_RTOL = 1e-6  # float round-off for deterministic metrics
+
+_COUNT_KEYS = {"generated_tokens", "ticks", "evictions"}
+
+
+def classify(path: str) -> str:
+    """Tolerance class of one leaf metric path (suffix conventions).
+
+    ``workload/...`` subtrees are benchmark *configuration*, not
+    measurement: they compare exactly whatever their suffix, so a PR
+    cannot quietly move a headline metric by changing the workload
+    underneath it (e.g. ``workload/mean_interarrival_s``).
+    """
+    key = path.rsplit("/", 1)[-1]
+    if key == "note":
+        return "ignore"
+    if "workload/" in path or path.startswith("workload"):
+        return "exact"
+    if "speedup" in key or key.endswith("tokens_per_s"):
+        return "higher_better"
+    if key.endswith("_us") or key.endswith("_s"):
+        return "wall"
+    if key in _COUNT_KEYS:
+        return "count"
+    return "exact"
+
+
+def _leaves(payload, prefix=""):
+    """Flatten nested dicts to {path: leaf} (lists stay leaves)."""
+    out = {}
+    if isinstance(payload, dict):
+        for k, v in payload.items():
+            if isinstance(v, dict):
+                out.update(_leaves(v, f"{prefix}{k}/"))
+            else:
+                out[f"{prefix}{k}"] = v
+    else:
+        out[prefix] = payload
+    return out
+
+
+def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor):
+    rule = classify(path)
+    if rule == "ignore":
+        return None
+    if isinstance(base, bool) or not isinstance(base, (int, float)):
+        # flags, strings, shape lists: deterministic structure
+        if cur != base:
+            return (
+                f"{path}: expected {base!r}, got {cur!r} "
+                "(deterministic metric changed)"
+            )
+        return None
+    if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+        return f"{path}: expected a number like {base!r}, got {cur!r}"
+    if rule == "wall":
+        if cur > base * wall_tolerance:
+            return (
+                f"{path}: {cur:g} exceeds {wall_tolerance:g}x the "
+                f"baseline {base:g} (wall-clock regression)"
+            )
+    elif rule == "higher_better":
+        if cur < base * ratio_floor:
+            return (
+                f"{path}: {cur:g} fell below {ratio_floor:g}x the "
+                f"baseline {base:g} (throughput/speedup regression)"
+            )
+    elif rule == "count":
+        # wall-clock-paced counts: only an upward blowup is a regression
+        # (runner speed legitimately moves these in both directions)
+        if cur > base * wall_tolerance + COUNT_SLACK:
+            return (
+                f"{path}: {cur:g} exceeds {wall_tolerance:g}x the "
+                f"baseline {base:g} + {COUNT_SLACK:g} "
+                "(scheduling count blew up)"
+            )
+    else:
+        tol = EXACT_RTOL * max(abs(base), 1.0)
+        if abs(cur - base) > tol:
+            return (
+                f"{path}: {cur!r} != baseline {base!r} "
+                "(deterministic metric changed)"
+            )
+    return None
+
+
+def compare_payloads(
+    name,
+    baseline,
+    current,
+    *,
+    wall_tolerance=WALL_TOLERANCE,
+    ratio_floor=RATIO_FLOOR,
+):
+    """Every regression of ``current`` against ``baseline`` (else [])."""
+    errors = []
+    base_leaves = _leaves(baseline)
+    cur_leaves = _leaves(current)
+    for path in sorted(base_leaves):
+        if classify(path) == "ignore":
+            continue
+        if path not in cur_leaves:
+            errors.append(
+                f"{name}:{path}: metric missing from the fresh run "
+                "(baseline has it)"
+            )
+            continue
+        err = _check_leaf(
+            path,
+            base_leaves[path],
+            cur_leaves[path],
+            wall_tolerance=wall_tolerance,
+            ratio_floor=ratio_floor,
+        )
+        if err:
+            errors.append(f"{name}:{err}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    ap.add_argument("--current-dir", default=".")
+    ap.add_argument(
+        "--files",
+        nargs="*",
+        default=None,
+        help="artifact names to compare (default: every BENCH_*.json "
+        "in the baseline dir)",
+    )
+    ap.add_argument("--wall-tolerance", type=float, default=WALL_TOLERANCE)
+    ap.add_argument("--ratio-floor", type=float, default=RATIO_FLOOR)
+    args = ap.parse_args(argv)
+
+    names = args.files
+    if not names:
+        pattern = os.path.join(args.baseline_dir, "BENCH_*.json")
+        names = sorted(os.path.basename(p) for p in glob.glob(pattern))
+    if not names:
+        print(
+            f"ERROR: no BENCH_*.json baselines in {args.baseline_dir}",
+            file=sys.stderr,
+        )
+        return 1
+
+    errors = []
+    for name in names:
+        base_path = os.path.join(args.baseline_dir, name)
+        cur_path = os.path.join(args.current_dir, name)
+        try:
+            with open(base_path) as f:
+                baseline = json.load(f)
+        except (OSError, ValueError) as e:
+            errors.append(f"{name}: unreadable baseline {base_path}: {e}")
+            continue
+        if not os.path.exists(cur_path):
+            errors.append(
+                f"{name}: fresh artifact missing at {cur_path} "
+                "(did the bench run?)"
+            )
+            continue
+        try:
+            with open(cur_path) as f:
+                current = json.load(f)
+        except (OSError, ValueError) as e:
+            errors.append(
+                f"{name}: unreadable fresh artifact {cur_path}: {e} "
+                "(bench killed mid-write?)"
+            )
+            continue
+        file_errors = compare_payloads(
+            name,
+            baseline,
+            current,
+            wall_tolerance=args.wall_tolerance,
+            ratio_floor=args.ratio_floor,
+        )
+        n_metrics = len(_leaves(baseline))
+        status = "FAIL" if file_errors else "OK"
+        print(
+            f"{name}: {n_metrics} baseline metrics, "
+            f"{len(file_errors)} regressed [{status}]"
+        )
+        errors += file_errors
+
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
