@@ -28,6 +28,11 @@ class ModelConfig:
     tie_embeddings: bool = True    # False -> separate unembedding matrix
     attn_impl: str = "blockwise"   # blockwise | full
     attn_chunk: int = 1024         # kv/q chunk for blockwise attention
+    # paged decode attention path (kernels/paged_attention.py):
+    # unfused (reference gather + chunk_decode_attention) | fused (one
+    # Pallas kernel, same math) | fused_sc (fused, SC-sampled QK^T —
+    # needs per-token rng keys, see models/attention.py)
+    paged_attn: str = "unfused"
     # MoE
     n_experts: int = 0
     top_k: int = 0

@@ -1,0 +1,545 @@
+"""Pallas kernel: fused paged attention for the decode hot path.
+
+The paged serve path (``models/attention.py:paged_attention_block``)
+historically ran block-table gather -> QK^T -> softmax -> V accumulation
+as separate XLA ops, materializing every row's full gathered cache view
+per tick.  This kernel collapses the sequence into ONE ``pallas_call``
+per layer, flash-attention style:
+
+* **block-table gather in-kernel** — the K/V block pools ride in whole
+  (one kv-head slice per grid step) and each grid step loads just the
+  one ``block_size`` page its block-table entry names, so the
+  (b, nb*bs, kv, hd) gathered view is never materialized;
+* **online softmax** — a running (max, denominator, accumulator) triple
+  lives in VMEM scratch across the KV-block grid axis (the same
+  recurrence as ``models/attention.py:blockwise_attention``), so peak
+  memory per step is one (block_q, block_size) logits tile;
+* **masking identical to the unfused path** — kv position ``t`` is live
+  for chunk row ``i`` of request ``r`` iff ``t <= lengths[r] + i``
+  (causal within the chunk plus the fill mask), exactly
+  ``chunk_decode_attention``'s predicate, so fused and unfused outputs
+  agree to float tolerance and greedy-decoded tokens are identical
+  (``tests/test_paged_attention.py``).
+
+The SC variant (:func:`paged_attention_fused_sc`) replaces the exact
+QK^T with the paper's stochastic MUL: operands quantize onto the DTC
+grid in-kernel (``kernels/sc_fused.py:encode_fx16``), Bernoulli cells
+come from the Horner bit-ladder, and logits are signed pop-count totals.
+Every uniform word draws from ``sc/ctr_rng.py``'s pinned Threefry-2x32
+stream with the QUERY TOKEN's key (folded from its request key and
+absolute position upstream) and counter
+
+    c0 = (t_abs * n_heads + head) * head_dim + d,   c1 = s * nwords + w
+
+so a logit's bits depend only on (request key, query position, kv
+position, head, d) — never on batch composition, chunk boundaries, KV
+block size, or eviction/resume.  :func:`sc_qk_logits_host` is the
+host-side twin (same jnp body, bit equality by construction) the
+invariance tests pin against.
+
+Tile selection (``block_q`` rows per grid step, ``lane_words`` RNG words
+per Horner sweep) routes through ``sc/autotune.py``'s versioned cache
+under the ``attn`` kernel kind, with a deterministic heuristic fallback.
+Tiling never changes bits: each logit's pop-count total is computed
+whole within one grid step from globally-addressed counters.
+
+Like every Pallas kernel in this repo the launch defaults to
+``interpret=True`` (CPU correctness harness); real TPUs flip it off.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sc_fused import encode_fx16
+from repro.kernels.sc_mul import LANE_BITS, NSLICES, popcount32
+from repro.sc import autotune, ctr_rng
+
+NEG_INF = -1e30  # matches models/attention.py
+_DENOM_GUARD = 1e-30  # matches blockwise_attention's divide guard
+_SCALE_GUARD = 1e-30  # matches sc/encoding.py's max-abs clamp
+
+
+def _scale(hd: int):
+    # the selfsame construction as chunk_decode_attention, so the fused
+    # logits match the unfused path bit-for-bit before the softmax
+    return 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+
+def split_keys4(keys):
+    """Per-token raw ``(..., 2)`` keys -> ``(..., 4)`` operand key words.
+
+    The same x/y operand-stream split the fused SC matmul uses
+    (``sc/backends.py:pallas_fused_rows``): ``jax.random.split`` each
+    token key, query stream takes the first half, key stream the second.
+    """
+    raw = ctr_rng.raw_key(keys)
+    flat = raw.reshape(-1, 2)
+    split = jax.vmap(jax.random.split)(flat)  # (N, 2, 2)
+    keys4 = jnp.concatenate([split[:, 0], split[:, 1]], axis=-1)
+    return keys4.reshape(raw.shape[:-1] + (4,)).astype(jnp.uint32)
+
+
+def _online_softmax_step(logits, v_blk, m_ref, d_ref, a_ref):
+    """One flash-attention update of the (m, denom, acc) VMEM carry."""
+    m_prev = m_ref[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)
+    m_ref[...] = m_new
+    d_ref[...] = d_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    a_ref[...] = a_ref[...] * alpha + jnp.dot(p, v_blk)
+
+
+def _mask(logits, len_ref, *, j, sc, block_size, block_q):
+    """``chunk_decode_attention``'s predicate: t <= lengths[r] + i."""
+    shape = (block_q, block_size)
+    t_idx = j * block_size + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    row = pl.program_id(2) * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, shape, 0
+    )
+    q_pos = len_ref[0, 0] + row % sc
+    return jnp.where(t_idx <= q_pos, logits, NEG_INF)
+
+
+def _paged_attn_kernel(
+    bt_ref,
+    len_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    d_ref,
+    a_ref,
+    *,
+    sc: int,
+    block_size: int,
+    nb: int,
+    block_q: int,
+):
+    """Deterministic fused step: gather one page, QK^T, online softmax."""
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    page = bt_ref[0, 0]
+    k_blk = k_ref[page][:, 0, :].astype(jnp.float32)  # (bs, hd)
+    v_blk = v_ref[page][:, 0, :].astype(jnp.float32)  # (bs, hd)
+    q_blk = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    logits = jnp.dot(q_blk, k_blk.T) * _scale(q_blk.shape[-1])
+    logits = _mask(
+        logits, len_ref, j=j, sc=sc, block_size=block_size, block_q=block_q
+    )
+    _online_softmax_step(logits, v_blk, m_ref, d_ref, a_ref)
+
+    @pl.when(j == nb - 1)
+    def _emit():
+        out = a_ref[...] / jnp.maximum(d_ref[...], _DENOM_GUARD)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _sc_counts(keys4, fxq, fxk, c0, *, nbit: int, lane_words: int):
+    """Signed-magnitude pop-count core shared by kernel and host twin.
+
+    keys4: (bq, 4) per-row operand key words; fxq: (bq, hd) fx16 query
+    magnitudes; fxk: (bs, hd) fx16 key magnitudes; c0: (bq, bs, hd)
+    uint32 product counters.  Returns int32 (bq, bs, hd) pop-count
+    totals.  Integer accumulation over words is associative, so
+    ``lane_words`` can never change the result.
+    """
+    nwords = nbit // LANE_BITS
+    kq0 = keys4[:, 0][:, None, None, None]
+    kq1 = keys4[:, 1][:, None, None, None]
+    kk0 = keys4[:, 2][:, None, None, None]
+    kk1 = keys4[:, 3][:, None, None, None]
+    c0_4 = c0[..., None]
+    pq4 = fxq[:, None, :, None]
+    pk4 = fxk[None, :, :, None]
+    counts = jnp.zeros(c0.shape, jnp.int32)
+    for w0 in range(0, nwords, lane_words):
+        wc = min(lane_words, nwords - w0)
+        widx = jnp.uint32(w0) + jax.lax.broadcasted_iota(
+            jnp.uint32, (wc,), 0
+        )
+        tq = jnp.zeros(c0.shape + (wc,), jnp.uint32)
+        tk = jnp.zeros(c0.shape + (wc,), jnp.uint32)
+        for s in range(NSLICES):  # LSB -> MSB Horner bit-ladder
+            c1 = (jnp.uint32(s * nwords) + widx)[None, None, None, :]
+            uq = ctr_rng.threefry2x32(kq0, kq1, c0_4, c1)[0]
+            uk = ctr_rng.threefry2x32(kk0, kk1, c0_4, c1)[0]
+            mq = jnp.uint32(0) - ((pq4 >> jnp.uint32(s)) & jnp.uint32(1))
+            mk = jnp.uint32(0) - ((pk4 >> jnp.uint32(s)) & jnp.uint32(1))
+            tq = (mq & (uq | tq)) | (~mq & (uq & tq))
+            tk = (mk & (uk | tk)) | (~mk & (uk & tk))
+        survived = tq & tk  # two-pulse AND (paper Fig. 5)
+        counts += jnp.sum(popcount32(survived).astype(jnp.int32), axis=-1)
+    return counts
+
+
+def _sc_logits(q_blk, k_blk, keys4, c0, *, nbit, levels, quantize, lane):
+    """SC-sampled QK^T logits tile from exact q/k tiles (f32 in/out)."""
+    scq = jnp.maximum(jnp.max(jnp.abs(q_blk), axis=1), _SCALE_GUARD)
+    sck = jnp.maximum(jnp.max(jnp.abs(k_blk), axis=1), _SCALE_GUARD)
+    fxq = encode_fx16(jnp.abs(q_blk) / scq[:, None], levels, quantize)
+    fxk = encode_fx16(jnp.abs(k_blk) / sck[:, None], levels, quantize)
+    sgq = jnp.sign(q_blk).astype(jnp.int32)
+    sgk = jnp.sign(k_blk).astype(jnp.int32)
+    counts = _sc_counts(keys4, fxq, fxk, c0, nbit=nbit, lane_words=lane)
+    signed = sgq[:, None, :] * sgk[None, :, :] * counts
+    total = jnp.sum(signed, axis=-1).astype(jnp.float32)  # (bq, bs)
+    est = total / jnp.float32(nbit) * scq[:, None] * sck[None, :]
+    return est * _scale(q_blk.shape[-1])
+
+
+def _paged_attn_sc_kernel(
+    bt_ref,
+    len_ref,
+    q_ref,
+    keys_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    d_ref,
+    a_ref,
+    *,
+    sc: int,
+    block_size: int,
+    nb: int,
+    block_q: int,
+    n_heads: int,
+    group: int,
+    nbit: int,
+    levels: int,
+    quantize: bool,
+    lane_words: int,
+):
+    """SC-sampled fused step: same gather and online softmax, but the
+    QK^T tile is the paper's stochastic MUL drawn from each query
+    token's pinned counter stream."""
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+        a_ref[...] = jnp.zeros_like(a_ref)
+
+    page = bt_ref[0, 0]
+    k_blk = k_ref[page][:, 0, :].astype(jnp.float32)  # (bs, hd)
+    v_blk = v_ref[page][:, 0, :].astype(jnp.float32)  # (bs, hd)
+    q_blk = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    hd = q_blk.shape[-1]
+
+    # global (query row, kv position, lane) -> pinned product counter:
+    # the query's identity rides in its KEY, the kv side in the counter,
+    # so the draw survives any batch/chunk/block-size/eviction reshuffle
+    shape3 = (block_q, block_size, hd)
+    t_abs = jnp.uint32(j * block_size) + jax.lax.broadcasted_iota(
+        jnp.uint32, shape3, 1
+    )
+    d_idx = jax.lax.broadcasted_iota(jnp.uint32, shape3, 2)
+    row = jnp.uint32(pl.program_id(2) * block_q) + jax.lax.broadcasted_iota(
+        jnp.uint32, shape3, 0
+    )
+    head = (
+        jnp.uint32(pl.program_id(1)) * jnp.uint32(group)
+        + row // jnp.uint32(sc)
+    )
+    c0 = (t_abs * jnp.uint32(n_heads) + head) * jnp.uint32(hd) + d_idx
+
+    logits = _sc_logits(
+        q_blk,
+        k_blk,
+        keys_ref[0],
+        c0,
+        nbit=nbit,
+        levels=levels,
+        quantize=quantize,
+        lane=lane_words,
+    )
+    logits = _mask(
+        logits, len_ref, j=j, sc=sc, block_size=block_size, block_q=block_q
+    )
+    _online_softmax_step(logits, v_blk, m_ref, d_ref, a_ref)
+
+    @pl.when(j == nb - 1)
+    def _emit():
+        out = a_ref[...] / jnp.maximum(d_ref[...], _DENOM_GUARD)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def _tpu_params():
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return cls(
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+    )
+
+
+def _rows_layout(q, kvh: int):
+    """(b, sc, h, hd) queries -> (b, kvh, g*sc, hd) kernel rows.
+
+    Row ``r`` of a (batch, kv-head) slice holds query head
+    ``kvh_index * g + r // sc`` at chunk offset ``r % sc`` — the same
+    grouping as ``models/attention.py:_grouped``.
+    """
+    b, sc, h, hd = q.shape
+    g = h // kvh
+    qg = q.reshape(b, sc, kvh, g, hd).transpose(0, 2, 3, 1, 4)
+    return qg.reshape(b, kvh, g * sc, hd)
+
+
+def _rows_unlayout(out, *, sc: int, h: int):
+    """Inverse of :func:`_rows_layout` (after slicing off row padding)."""
+    b, kvh, rows, hd = out.shape
+    g = rows // sc
+    out = out.reshape(b, kvh, g, sc, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(b, sc, h, hd)
+
+
+def _launch(
+    kernel,
+    *,
+    grid,
+    block_q,
+    hd,
+    num_pages,
+    bs,
+    b,
+    kvh,
+    rows_p,
+    extra_specs,
+    operands,
+    interpret,
+):
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, h_, qi, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, h_, qi, j: (i, 0)),
+            pl.BlockSpec(
+                (1, 1, block_q, hd), lambda i, h_, qi, j: (i, h_, qi, 0)
+            ),
+            *extra_specs,
+            pl.BlockSpec(
+                (num_pages, bs, 1, hd), lambda i, h_, qi, j: (0, 0, h_, 0)
+            ),
+            pl.BlockSpec(
+                (num_pages, bs, 1, hd), lambda i, h_, qi, j: (0, 0, h_, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, hd), lambda i, h_, qi, j: (i, h_, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rows_p, hd), jnp.float32),
+        scratch_shapes=[
+            _vmem((block_q, 1)),
+            _vmem((block_q, 1)),
+            _vmem((block_q, hd)),
+        ],
+        compiler_params=_tpu_params(),
+        interpret=interpret,
+    )(*operands)
+
+
+def paged_attention_fused(
+    q,
+    k_pages,
+    v_pages,
+    block_table,
+    lengths,
+    *,
+    block_q: int = 0,
+    interpret: bool = True,
+):
+    """Fused paged attention, deterministic QK^T.
+
+    q: (b, sc, h, hd) post-rope queries (chunk token i of row r sits at
+    absolute position ``lengths[r] + i``, K/V already scattered);
+    k/v_pages: (P, bs, kvh, hd) block pools; block_table: (b, nb);
+    lengths: (b,) pre-chunk fill.  Returns (b, sc, h, hd) — the fused
+    equivalent of ``chunk_decode_attention(q, paged_gather(k), ...)``.
+    ``block_q = 0`` takes the row tile from the autotune cache
+    (``attn`` kernel kind; heuristic on miss).
+    """
+    import functools
+
+    b, sc, h, hd = q.shape
+    num_pages, bs, kvh, _ = k_pages.shape
+    nb = block_table.shape[1]
+    rows = (h // kvh) * sc
+    if block_q <= 0:
+        block_q = autotune.get_attn_tile(rows, bs, hd, 0).block_q
+    qr = _rows_layout(q, kvh)
+    pad = (-rows) % block_q
+    if pad:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    rows_p = rows + pad
+    kernel = functools.partial(
+        _paged_attn_kernel, sc=sc, block_size=bs, nb=nb, block_q=block_q
+    )
+    out = _launch(
+        kernel,
+        grid=(b, kvh, rows_p // block_q, nb),
+        block_q=block_q,
+        hd=hd,
+        num_pages=num_pages,
+        bs=bs,
+        b=b,
+        kvh=kvh,
+        rows_p=rows_p,
+        extra_specs=[],
+        operands=(
+            block_table.astype(jnp.int32),
+            lengths.astype(jnp.int32)[:, None],
+            qr,
+            k_pages,
+            v_pages,
+        ),
+        interpret=interpret,
+    )
+    return _rows_unlayout(out[:, :, :rows], sc=sc, h=h).astype(q.dtype)
+
+
+def paged_attention_fused_sc(
+    keys,
+    q,
+    k_pages,
+    v_pages,
+    block_table,
+    lengths,
+    *,
+    nbit: int,
+    operand_bits: int = 10,
+    quantize: bool = True,
+    block_q: int = 0,
+    lane_words: int = 0,
+    interpret: bool = True,
+):
+    """Fused paged attention with the SC-sampled QK^T.
+
+    keys: (b, sc, 2) raw per-token keys — each already folded from its
+    request key and ABSOLUTE position upstream (``lm.decode_paged``), so
+    the stochastic logits a token draws are a function of (request key,
+    position, head, kv position) alone.  Other operands as
+    :func:`paged_attention_fused`.  ``block_q`` / ``lane_words`` = 0
+    take the ``attn`` autotune entry; the tiling never changes bits.
+    """
+    import functools
+
+    b, sc, h, hd = q.shape
+    num_pages, bs, kvh, _ = k_pages.shape
+    nb = block_table.shape[1]
+    g = h // kvh
+    rows = g * sc
+    assert nbit % LANE_BITS == 0, "SC attention packs 32 cells per word"
+    tile = autotune.get_attn_tile(rows, bs, hd, nbit)
+    if block_q <= 0:
+        block_q = tile.block_q
+    if lane_words <= 0:
+        lane_words = tile.lane_words
+    lane_words = min(lane_words, max(1, nbit // LANE_BITS))
+    qr = _rows_layout(q, kvh)
+    keys4 = split_keys4(keys)  # (b, sc, 4)
+    rowk = jnp.broadcast_to(keys4[:, None], (b, g, sc, 4)).reshape(b, rows, 4)
+    pad = (-rows) % block_q
+    if pad:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        rowk = jnp.pad(rowk, ((0, 0), (0, pad), (0, 0)))
+    rows_p = rows + pad
+    kernel = functools.partial(
+        _paged_attn_sc_kernel,
+        sc=sc,
+        block_size=bs,
+        nb=nb,
+        block_q=block_q,
+        n_heads=h,
+        group=g,
+        nbit=nbit,
+        levels=1 << operand_bits,
+        quantize=quantize,
+        lane_words=lane_words,
+    )
+    out = _launch(
+        kernel,
+        grid=(b, kvh, rows_p // block_q, nb),
+        block_q=block_q,
+        hd=hd,
+        num_pages=num_pages,
+        bs=bs,
+        b=b,
+        kvh=kvh,
+        rows_p=rows_p,
+        extra_specs=[
+            pl.BlockSpec((1, block_q, 4), lambda i, h_, qi, j: (i, qi, 0)),
+        ],
+        operands=(
+            block_table.astype(jnp.int32),
+            lengths.astype(jnp.int32)[:, None],
+            qr,
+            rowk,
+            k_pages,
+            v_pages,
+        ),
+        interpret=interpret,
+    )
+    return _rows_unlayout(out[:, :, :rows], sc=sc, h=h).astype(q.dtype)
+
+
+def sc_qk_logits_host(
+    key,
+    q_row,
+    k_rows,
+    t_abs,
+    head: int,
+    n_heads: int,
+    *,
+    nbit: int,
+    operand_bits: int = 10,
+    quantize: bool = True,
+):
+    """Host-side twin of the kernel's SC QK^T for ONE query token.
+
+    key: raw (2,) token key; q_row: (hd,) post-rope query; k_rows:
+    (T, hd) cache rows sitting at absolute positions ``t_abs`` (T,);
+    ``head`` is the query's flat head index.  Same jnp body as the
+    kernel (same counters, same Threefry, same Horner ladder), so the
+    returned (T,) logits equal the kernel's pre-mask logits bit-for-bit
+    by construction — the anchor the reproducibility tests pin.
+    """
+    hd = q_row.shape[-1]
+    keys4 = split_keys4(key[None])  # (1, 4)
+    t_abs = jnp.asarray(t_abs, jnp.uint32)
+    d_idx = jnp.arange(hd, dtype=jnp.uint32)
+    c0 = (
+        t_abs[None, :, None] * jnp.uint32(n_heads) + jnp.uint32(head)
+    ) * jnp.uint32(hd) + d_idx[None, None, :]
+    logits = _sc_logits(
+        q_row[None].astype(jnp.float32),
+        k_rows.astype(jnp.float32),
+        keys4,
+        c0,
+        nbit=nbit,
+        levels=1 << operand_bits,
+        quantize=quantize,
+        lane=max(1, nbit // LANE_BITS),
+    )
+    return logits[0]

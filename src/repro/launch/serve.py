@@ -49,15 +49,24 @@ def main(argv=None):
                          "(--paged; 0 = size for slots x max_len)")
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="prompt tokens fed per row per tick (--paged)")
+    ap.add_argument("--fused-attention", action="store_true",
+                    help="run the fused paged-attention Pallas kernel "
+                         "instead of gather+chunk_decode_attention "
+                         "(--paged; see docs/kernels.md)")
     args = ap.parse_args(argv)
     if args.paged and args.mesh:
         raise SystemExit("--paged and --mesh are mutually exclusive (the "
                          "paged engine is single-mesh-slice; see "
                          "docs/serving.md)")
+    if args.fused_attention and not args.paged:
+        raise SystemExit("--fused-attention needs --paged (it is the "
+                         "paged decode path's kernel)")
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
     cfg = cfg.replace(param_dtype=jnp.float32, act_dtype=jnp.float32)
+    if args.fused_attention:
+        cfg = cfg.replace(paged_attn="fused")
     if cfg.frontend == "embeddings":
         raise SystemExit("serve demo uses token-frontend archs")
 
@@ -100,6 +109,10 @@ def main(argv=None):
     if args.paged:
         print(f"  {engine.ticks} ticks, {engine.evictions} evictions, "
               f"{engine.kv.pool.free_blocks} blocks free at drain")
+        lat = engine.decode_latency_ms()
+        if lat:
+            print(f"  decode p50={lat['decode_p50_ms']:.2f} "
+                  f"p95={lat['decode_p95_ms']:.2f} ms/token")
     for r in finished[:4]:
         print(f"  req {r.rid}: prompt[:6]={r.prompt[:6]} "
               f"generated={r.generated}")

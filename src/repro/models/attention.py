@@ -2,10 +2,16 @@
 plus single-token decode over a KV cache.
 
 Blockwise attention scans over KV chunks with a running (max, denominator,
-accumulator) triple, so peak memory is O(S·chunk) instead of O(S²) — this is
-what lets prefill_32k lower within HBM and is remat-friendly inside the
+accumulator) triple, so peak memory is O(S·chunk) instead of O(S²) —
+this is what lets prefill_32k lower within HBM and is remat-friendly inside the
 layer scan. GQA is computed grouped: q heads are reshaped to
 (kv_heads, group) so no KV head replication is materialized.
+
+The paged decode path (:func:`paged_attention_block`) additionally routes
+through ``cfg.paged_attn``: ``"unfused"`` runs the reference
+gather -> :func:`chunk_decode_attention` sequence, ``"fused"`` /
+``"fused_sc"`` dispatch to the single-``pallas_call`` kernels in
+``kernels/paged_attention.py``.
 """
 
 from __future__ import annotations
@@ -13,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paged_attention
 from repro.models import layers
 from repro.models.params import ParamSpec
 
@@ -20,7 +27,12 @@ NEG_INF = -1e30
 
 
 def attn_specs(cfg):
-    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    d, h, kv, hd = (
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.resolved_head_dim,
+    )
     sp = {
         "wq": ParamSpec((d, h * hd), ("embed", "heads"), "scaled"),
         "wk": ParamSpec((d, kv * hd), ("embed", "kv_embed"), "scaled"),
@@ -28,16 +40,20 @@ def attn_specs(cfg):
         "wo": ParamSpec((h * hd, d), ("heads", "embed"), "scaled"),
     }
     if cfg.qkv_bias:
-        sp.update({
-            "bq": ParamSpec((h * hd,), ("heads",), "zeros"),
-            "bk": ParamSpec((kv * hd,), ("kv_embed",), "zeros"),
-            "bv": ParamSpec((kv * hd,), ("kv_embed",), "zeros"),
-        })
+        sp.update(
+            {
+                "bq": ParamSpec((h * hd,), ("heads",), "zeros"),
+                "bk": ParamSpec((kv * hd,), ("kv_embed",), "zeros"),
+                "bv": ParamSpec((kv * hd,), ("kv_embed",), "zeros"),
+            }
+        )
     if cfg.qk_norm:
-        sp.update({
-            "q_norm": ParamSpec((hd,), (None,), "ones"),
-            "k_norm": ParamSpec((hd,), (None,), "ones"),
-        })
+        sp.update(
+            {
+                "q_norm": ParamSpec((hd,), (None,), "ones"),
+                "k_norm": ParamSpec((hd,), (None,), "ones"),
+            }
+        )
     return sp
 
 
@@ -53,9 +69,15 @@ def _project_qkv(x, p, cfg, positions, key=None):
         keys = [layers.fold_keys(key, 23 + j) for j in range(3)]
     else:
         keys = list(jax.random.split(key, 3))
-    q = layers.dense(x, p["wq"], cfg, keys[0], p.get("bq")).reshape(b, s, h, hd)
-    k = layers.dense(x, p["wk"], cfg, keys[1], p.get("bk")).reshape(b, s, kv, hd)
-    v = layers.dense(x, p["wv"], cfg, keys[2], p.get("bv")).reshape(b, s, kv, hd)
+    q = layers.dense(x, p["wq"], cfg, keys[0], p.get("bq")).reshape(
+        b, s, h, hd
+    )
+    k = layers.dense(x, p["wk"], cfg, keys[1], p.get("bk")).reshape(
+        b, s, kv, hd
+    )
+    v = layers.dense(x, p["wv"], cfg, keys[2], p.get("bv")).reshape(
+        b, s, kv, hd
+    )
     if cfg.qk_norm:
         q = layers.rms_norm(q, p["q_norm"])
         k = layers.rms_norm(k, p["k_norm"])
@@ -73,10 +95,16 @@ def full_attention(q, k, v, *, causal: bool = True):
     """Reference O(S²) attention. q: (b,s,h,d), k/v: (b,t,kv,d)."""
     b, s, h, hd = q.shape
     kv = k.shape[2]
-    qg = _grouped(q, kv)                                  # (b,s,kv,g,d)
+    qg = _grouped(q, kv)  # (b,s,kv,g,d)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
-    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) * scale
+    logits = (
+        jnp.einsum(
+            "bskgd,btkd->bkgst",
+            qg.astype(jnp.float32),
+            k.astype(jnp.float32),
+        )
+        * scale
+    )
     if causal:
         t = k.shape[1]
         mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
@@ -86,8 +114,15 @@ def full_attention(q, k, v, *, causal: bool = True):
     return out.reshape(b, s, h, hd).astype(q.dtype)
 
 
-def blockwise_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
-                        q_chunk: int | None = None):
+def blockwise_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    chunk: int = 1024,
+    q_chunk: int | None = None,
+):
     """Flash-style attention: q-chunk outer scan x kv-chunk inner scan with
     online softmax. Exact -- matches full_attention to float tolerance.
 
@@ -107,7 +142,7 @@ def blockwise_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
     t_unpadded = k.shape[1]
     t = t_unpadded
     ckv = min(chunk, t)
-    if t % ckv != 0:         # pad KV to a chunk multiple with masked slots
+    if t % ckv != 0:  # pad KV to a chunk multiple with masked slots
         pad = ckv - t % ckv
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
@@ -115,7 +150,7 @@ def blockwise_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
     cq = min(q_chunk or chunk, s)
     qpad = (-s) % cq
     g = h // kv
-    qg = _grouped(q, kv).astype(jnp.float32)              # (b,s,kv,g,d)
+    qg = _grouped(q, kv).astype(jnp.float32)  # (b,s,kv,g,d)
     if qpad:
         qg = jnp.pad(qg, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
     nq = (s + qpad) // cq
@@ -133,17 +168,24 @@ def blockwise_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
         m, denom, acc, qi, qbase = carry
         kc_i, vc_i, base = inputs
         logits = jnp.einsum("bkgsd,btkd->bkgst", qi, kc_i) * scale
-        kv_idx = base + jnp.arange(ckv)                   # (ckv,)
-        q_idx = qbase + jnp.arange(cq) + q_off            # (cq,)
-        mask = kv_idx[None, :] <= q_idx[:, None] if causal \
+        kv_idx = base + jnp.arange(ckv)  # (ckv,)
+        q_idx = qbase + jnp.arange(cq) + q_off  # (cq,)
+        mask = (
+            kv_idx[None, :] <= q_idx[:, None]
+            if causal
             else jnp.ones((cq, ckv), bool)
+        )
         valid = (kv_idx < t_unpadded)[None, :]
-        logits = jnp.where((mask & valid)[None, None, None], logits, NEG_INF)
+        logits = jnp.where(
+            (mask & valid)[None, None, None], logits, NEG_INF
+        )
         m_new = jnp.maximum(m, logits.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(logits - m_new[..., None])
         denom = denom * alpha + p.sum(axis=-1)
-        acc = acc * alpha[..., None] + jnp.einsum("bkgst,btkd->bkgsd", p, vc_i)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, vc_i
+        )
         return (m_new, denom, acc, qi, qbase), None
 
     bases = jnp.arange(nkv) * ckv
@@ -151,20 +193,21 @@ def blockwise_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
     vcm = jnp.moveaxis(vc, 1, 0)
 
     def q_step(_, inputs):
-        q_i, qbase = inputs                                # (b,cq,kv,g,d)
+        q_i, qbase = inputs  # (b,cq,kv,g,d)
         qi = jnp.einsum("bskgd->bkgsd", q_i)
         m0 = jnp.full((b, kv, g, cq), NEG_INF, jnp.float32)
         d0 = jnp.zeros((b, kv, g, cq), jnp.float32)
         a0 = jnp.zeros((b, kv, g, cq, hd), jnp.float32)
         (m, denom, acc, _, _), _ = jax.lax.scan(
-            kv_step, (m0, d0, a0, qi, qbase), (kcm, vcm, bases))
-        out = acc / jnp.maximum(denom, 1e-30)[..., None]   # (b,kv,g,cq,d)
+            kv_step, (m0, d0, a0, qi, qbase), (kcm, vcm, bases)
+        )
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]  # (b,kv,g,cq,d)
         return None, out
 
     qbases = jnp.arange(nq) * cq
     _, outs = jax.lax.scan(q_step, None, (jnp.moveaxis(qc, 1, 0), qbases))
     # outs: (nq, b, kv, g, cq, d) -> (b, s, h, d)
-    out = jnp.moveaxis(outs, 0, 3)                         # (b,kv,g,nq,cq,d)
+    out = jnp.moveaxis(outs, 0, 3)  # (b,kv,g,nq,cq,d)
     out = out.reshape(b, kv, g, nq * cq, hd)
     out = jnp.moveaxis(out, 3, 1)[:, :s].reshape(b, s, h, hd)
     return out.astype(q.dtype)
@@ -192,13 +235,15 @@ def chunk_decode_attention(q, k_cache, v_cache, lengths):
     """
     b, sc, h, hd = q.shape
     kv = k_cache.shape[2]
-    qg = _grouped(q, kv).astype(jnp.float32)              # (b,sc,kv,g,d)
+    qg = _grouped(q, kv).astype(jnp.float32)  # (b,sc,kv,g,d)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
-    logits = jnp.einsum("bskgd,btkd->bkgst", qg,
-                        k_cache.astype(jnp.float32)) * scale
-    t_idx = jnp.arange(k_cache.shape[1])                  # (L,)
-    q_pos = lengths[:, None] + jnp.arange(sc)[None, :]    # (b, sc)
-    mask = t_idx[None, None, :] <= q_pos[:, :, None]      # (b, sc, L)
+    logits = (
+        jnp.einsum("bskgd,btkd->bkgst", qg, k_cache.astype(jnp.float32))
+        * scale
+    )
+    t_idx = jnp.arange(k_cache.shape[1])  # (L,)
+    q_pos = lengths[:, None] + jnp.arange(sc)[None, :]  # (b, sc)
+    mask = t_idx[None, None, :] <= q_pos[:, :, None]  # (b, sc, L)
     logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache.astype(jnp.float32))
@@ -219,7 +264,7 @@ def paged_gather(pages, block_table):
     gathered (b, nb·bs, kv, d) view — the contiguous-cache layout, which
     is what proves paged == contiguous attention (same downstream math).
     """
-    g = jnp.take(pages, block_table, axis=0)              # (b, nb, bs, kv, d)
+    g = jnp.take(pages, block_table, axis=0)  # (b, nb, bs, kv, d)
     b, nb, bs = g.shape[:3]
     return g.reshape(b, nb * bs, *g.shape[3:])
 
@@ -238,7 +283,7 @@ def paged_scatter(pages, block_table, new, lengths, n_valid):
     b, sc = new.shape[:2]
     nb = block_table.shape[1]
     i = jnp.arange(sc)[None, :]
-    t = jnp.clip(lengths[:, None] + i, 0, nb * bs - 1)    # (b, sc)
+    t = jnp.clip(lengths[:, None] + i, 0, nb * bs - 1)  # (b, sc)
     valid = i < n_valid[:, None]
     page = jnp.take_along_axis(block_table, t // bs, axis=1)
     page = jnp.where(valid, page, 0)
@@ -247,29 +292,83 @@ def paged_scatter(pages, block_table, new, lengths, n_valid):
     return pages.at[page.reshape(-1), off.reshape(-1)].set(flat)
 
 
-def paged_attention_block(x, p, cfg, positions, key, k_pages, v_pages,
-                          block_table, lengths, n_valid):
+def paged_attention_block(
+    x,
+    p,
+    cfg,
+    positions,
+    key,
+    k_pages,
+    v_pages,
+    block_table,
+    lengths,
+    n_valid,
+):
     """Self-attention over the paged KV cache (chunked decode/prefill).
 
     x: (b, sc, d) chunk activations; the chunk's K/V scatter into the
     pool first, then attention runs over each row's gathered view —
     write-then-gather keeps the math identical to the contiguous path.
-    Returns (out, new_k_pages, new_v_pages).
+    ``cfg.paged_attn`` selects the lookup: ``"unfused"`` (reference
+    gather + :func:`chunk_decode_attention`), ``"fused"`` (one Pallas
+    kernel, same math to float tolerance), or ``"fused_sc"`` (fused with
+    the SC-sampled QK^T; needs per-token keys and draws them under salt
+    29, disjoint from the dense-layer salts).  Returns
+    (out, new_k_pages, new_v_pages).
     """
     q, k, v = _project_qkv(x, p, cfg, positions, key)
     k_pages = paged_scatter(k_pages, block_table, k, lengths, n_valid)
     v_pages = paged_scatter(v_pages, block_table, v, lengths, n_valid)
-    kc = paged_gather(k_pages, block_table)
-    vc = paged_gather(v_pages, block_table)
-    out = chunk_decode_attention(q, kc, vc, lengths)
+    mode = getattr(cfg, "paged_attn", "unfused")
+    if mode == "fused":
+        out = paged_attention.paged_attention_fused(
+            q, k_pages, v_pages, block_table, lengths
+        )
+    elif mode == "fused_sc":
+        if key is None or key.ndim <= 1:
+            raise ValueError(
+                "paged_attn='fused_sc' needs per-token rng keys (pass "
+                "rng to decode_paged) so attention draws stay pinned to "
+                "(request, position)"
+            )
+        out = paged_attention.paged_attention_fused_sc(
+            layers.fold_keys(key, 29),
+            q,
+            k_pages,
+            v_pages,
+            block_table,
+            lengths,
+            nbit=cfg.sc_nbit,
+        )
+    elif mode == "unfused":
+        kc = paged_gather(k_pages, block_table)
+        vc = paged_gather(v_pages, block_table)
+        out = chunk_decode_attention(q, kc, vc, lengths)
+    else:
+        raise ValueError(
+            f"unknown cfg.paged_attn={mode!r} "
+            "(expected 'unfused', 'fused', or 'fused_sc')"
+        )
     b, s, _, _ = out.shape
     okey = layers.fold_keys(key, 7)
-    return (layers.dense(out.reshape(b, s, -1), p["wo"], cfg, okey),
-            k_pages, v_pages)
+    return (
+        layers.dense(out.reshape(b, s, -1), p["wo"], cfg, okey),
+        k_pages,
+        v_pages,
+    )
 
 
-def attention_block(x, p, cfg, positions, key=None, *, cache=None,
-                    cache_length=None, constrain=None):
+def attention_block(
+    x,
+    p,
+    cfg,
+    positions,
+    key=None,
+    *,
+    cache=None,
+    cache_length=None,
+    constrain=None,
+):
     """Self-attention sub-block. Returns (out, new_cache).
 
     Training/prefill: cache is None -> causal attention over the sequence
@@ -296,11 +395,17 @@ def attention_block(x, p, cfg, positions, key=None, *, cache=None,
         v = cst(v, "batch", "seq", None, None)
     if cache is not None:
         kc, vc = cache
-        pos = positions[:, 0]                             # (b,) write index
-        kc = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
-            c, upd, (i, 0, 0)))(kc, k, pos)
-        vc = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(
-            c, upd, (i, 0, 0)))(vc, v, pos)
+        pos = positions[:, 0]  # (b,) write index
+        kc = jax.vmap(
+            lambda c, upd, i: jax.lax.dynamic_update_slice(
+                c, upd, (i, 0, 0)
+            )
+        )(kc, k, pos)
+        vc = jax.vmap(
+            lambda c, upd, i: jax.lax.dynamic_update_slice(
+                c, upd, (i, 0, 0)
+            )
+        )(vc, v, pos)
         out = decode_attention(q, kc, vc, cache_length)
         new_cache = (kc, vc)
     else:
@@ -308,9 +413,14 @@ def attention_block(x, p, cfg, positions, key=None, *, cache=None,
             out = full_attention(q, k, v, causal=True)
         else:
             out = blockwise_attention(
-                q, k, v, causal=True, chunk=cfg.attn_chunk,
+                q,
+                k,
+                v,
+                causal=True,
+                chunk=cfg.attn_chunk,
                 # CP: q already sharded over `model` -> single q block
-                q_chunk=None if heads_tp else q.shape[1])
+                q_chunk=None if heads_tp else q.shape[1],
+            )
         new_cache = (k, v)
     if heads_tp or cache is not None:
         out = cst(out, "batch", "seq", "heads", None)

@@ -303,11 +303,17 @@ def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
     (request key, position, layer, call site), never on batch neighbours,
     chunk boundaries, or admission order.  The same request with the same
     key therefore produces identical values served alone, in a full
-    batch, or re-prefilled after an eviction.
+    batch, or re-prefilled after an eviction.  ``paged_attn="fused_sc"``
+    rides the same contract (attention QK^T draws under salt 29), which
+    is why it REQUIRES ``rng``.
     """
     if cfg.family in ("ssm", "hybrid"):
         raise ValueError("decode_paged supports attention-family configs "
                          f"only, got family={cfg.family!r}")
+    if rng is None and getattr(cfg, "paged_attn", "unfused") == "fused_sc":
+        raise ValueError("paged_attn='fused_sc' draws stochastic attention "
+                         "logits from per-request keys; pass rng=(b, 2) "
+                         "raw keys to decode_paged")
     b, sc = tokens.shape
     x = layers.embed(tokens, params["embed"]).astype(cfg.act_dtype)
     positions = lengths[:, None] + jnp.arange(sc)[None, :]      # (b, sc)

@@ -63,9 +63,42 @@ class FusedTile:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass(frozen=True)
+class AttnTile:
+    """One fused paged-attention tiling (``kernels/paged_attention.py``).
+
+    ``block_q`` query rows per grid step; ``lane_words`` packed 32-bit
+    RNG words per Horner sweep of the SC-sampled QK^T (deterministic
+    entries carry ``lane_words = 1`` as a placeholder — no rng drawn).
+    Like the matmul tiles, the choice can never change bits: every
+    logit's pop-count total is computed whole within one grid step from
+    globally-addressed counters.
+    """
+
+    block_q: int = 8
+    lane_words: int = 16
+
+    def kwargs(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 def cache_key(m: int, k: int, n: int, nbit: int,
               dtype: str = "float32") -> str:
     return f"{m}x{k}x{n}|nbit={nbit}|dtype={dtype}"
+
+
+def attn_cache_key(rows: int, block_size: int, head_dim: int, nbit: int,
+                   dtype: str = "float32") -> str:
+    """``attn`` kernel-kind key: (query rows, kv block, head dim, nbit).
+
+    ``rows = group * chunk_width`` is the kernel's flattened query-row
+    axis per (batch, kv-head) slice; ``nbit = 0`` marks the
+    deterministic (non-SC) QK^T variant.  The kind prefix keeps the
+    attention entries disjoint from the matmul keys in the same
+    versioned file.
+    """
+    return (f"attn|{rows}x{block_size}x{head_dim}|nbit={nbit}"
+            f"|dtype={dtype}")
 
 
 def load_cache(path: str | None = None) -> dict:
@@ -162,6 +195,50 @@ def get_tile(m: int, k: int, n: int, nbit: int, dtype: str = "float32",
     return heuristic_tile(m, k, n, nbit)
 
 
+def heuristic_attn_tile(rows: int, block_size: int, head_dim: int,
+                        nbit: int) -> AttnTile:
+    """Deterministic cache-miss fallback for the paged-attention kernel.
+
+    Deterministic QK^T (``nbit <= 0``) draws no stochastic words, so the
+    only knob is ``block_q``; the SC variant bounds its per-step
+    (block_q, block_size, head_dim, lane_words) Bernoulli working set by
+    the same VMEM cap as the matmul tiles.
+    """
+    bq = _pow2_cover(rows, 8)
+    if nbit <= 0:
+        return AttnTile(block_q=bq, lane_words=1)
+    nwords = max(1, nbit // 32)
+    lane = min(nwords, 16)
+    while bq * block_size * head_dim * lane > _MAX_TILE_WORDS and lane > 1:
+        lane //= 2
+    while bq * block_size * head_dim * lane > _MAX_TILE_WORDS and bq > 1:
+        bq //= 2
+    return AttnTile(block_q=bq, lane_words=lane)
+
+
+def get_attn_tile(rows: int, block_size: int, head_dim: int, nbit: int,
+                  dtype: str = "float32",
+                  cache: dict | None = None) -> AttnTile:
+    """Cache-then-heuristic lookup for the fused paged-attention kernel.
+
+    Same contract as :func:`get_tile`: pure function of the call
+    signature and cache contents, and the returned tiling can never
+    change the kernel's bits — only its wall-clock.
+    """
+    entries = cache if cache is not None else _cached_entries()
+    entry = entries.get(attn_cache_key(rows, block_size, head_dim, nbit,
+                                       dtype))
+    if entry is not None:
+        try:
+            tile = AttnTile(block_q=int(entry["block_q"]),
+                            lane_words=int(entry["lane_words"]))
+            if min(dataclasses.astuple(tile)) >= 1:
+                return tile
+        except (KeyError, TypeError, ValueError):
+            pass                     # malformed entry -> heuristic
+    return heuristic_attn_tile(rows, block_size, head_dim, nbit)
+
+
 def candidate_tiles(m: int, k: int, n: int, nbit: int) -> list:
     """The tuner's search space for one call shape (heuristic included).
 
@@ -229,6 +306,92 @@ def tune_shape(m: int, k: int, n: int, nbit: int, *,
     table = []
     for tile in cands:
         us = measure_tile(m, k, n, nbit, tile, iters=iters)
+        table.append((tile, us))
+        if verbose:
+            print(f"  {dataclasses.astuple(tile)!s:<22} {us:10.1f} us")
+    best_tile, best_us = min(table, key=lambda tu: tu[1])
+    return best_tile, best_us, table
+
+
+def candidate_attn_tiles(rows: int, block_size: int, head_dim: int,
+                         nbit: int) -> list:
+    """Search space for one paged-attention call shape (small on purpose)."""
+    cands = []
+    if nbit <= 0:
+        for bq in {_pow2_cover(rows, c) for c in (4, 8, 16, 32)}:
+            cands.append(AttnTile(block_q=bq, lane_words=1))
+    else:
+        nwords = max(1, nbit // 32)
+        for bq in {_pow2_cover(rows, c) for c in (4, 8, 16)}:
+            for lane in {min(nwords, c) for c in (8, 16, 32)}:
+                if bq * block_size * head_dim * lane <= _MAX_TILE_WORDS:
+                    cands.append(AttnTile(block_q=bq, lane_words=lane))
+    cands.append(heuristic_attn_tile(rows, block_size, head_dim, nbit))
+    return sorted(set(cands), key=lambda t: dataclasses.astuple(t))
+
+
+def measure_attn_tile(rows: int, block_size: int, head_dim: int, nbit: int,
+                      tile: AttnTile, *, num_pages: int = 8,
+                      operand_bits: int = 10, iters: int = 3,
+                      warmup: int = 1, seed: int = 0) -> float:
+    """Median wall-clock µs of the fused paged-attention kernel.
+
+    ``rows`` is treated as a single-request, single-kv-head row axis
+    (chunk width ``rows``, group 1) — the per-step work the kernel does
+    is identical for any (group, chunk) split of the same row count.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import paged_attention
+    from repro.sc import ctr_rng
+
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.uniform(kq, (1, rows, 1, head_dim), jnp.float32,
+                           -1.0, 1.0)
+    k_pages = jax.random.uniform(
+        kk, (num_pages, block_size, 1, head_dim), jnp.float32, -1.0, 1.0)
+    v_pages = jax.random.uniform(
+        kv, (num_pages, block_size, 1, head_dim), jnp.float32, -1.0, 1.0)
+    table = jnp.arange(num_pages, dtype=jnp.int32)[None]
+    lengths = jnp.array([num_pages * block_size - rows], jnp.int32)
+    keys = jnp.broadcast_to(ctr_rng.raw_key(key)[None, None],
+                            (1, rows, 2))
+
+    if nbit <= 0:
+        def run():
+            return paged_attention.paged_attention_fused(
+                q, k_pages, v_pages, table, lengths,
+                block_q=tile.block_q).block_until_ready()
+    else:
+        def run():
+            return paged_attention.paged_attention_fused_sc(
+                keys, q, k_pages, v_pages, table, lengths, nbit=nbit,
+                operand_bits=operand_bits, block_q=tile.block_q,
+                lane_words=tile.lane_words).block_until_ready()
+
+    for _ in range(warmup):
+        run()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        run()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def tune_attn_shape(rows: int, block_size: int, head_dim: int, nbit: int, *,
+                    candidates: list | None = None, iters: int = 3,
+                    verbose: bool = False) -> tuple:
+    """Time every candidate attention tile; ``(best, best_us, table)``."""
+    cands = candidates if candidates is not None else candidate_attn_tiles(
+        rows, block_size, head_dim, nbit)
+    table = []
+    for tile in cands:
+        us = measure_attn_tile(rows, block_size, head_dim, nbit, tile,
+                               iters=iters)
         table.append((tile, us))
         if verbose:
             print(f"  {dataclasses.astuple(tile)!s:<22} {us:10.1f} us")

@@ -49,6 +49,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
+import time
 from functools import partial
 
 import jax
@@ -386,10 +387,17 @@ class PagedServingEngine(_ArchTracedEngine):
         self.scheduler = sched.Scheduler(
             scfg, self.kv, base_key=jax.random.PRNGKey(scfg.seed),
             on_finish=self._on_finish)
-        self._stochastic_substrate = cfg.sc_backend != "exact"
+        # fused_sc attention draws per-token stochastic logits even when
+        # the dense substrate is exact, so it needs per-request keys too
+        self._stochastic_substrate = (
+            cfg.sc_backend != "exact"
+            or getattr(cfg, "paged_attn", "unfused") == "fused_sc")
         self._step_fn = jax.jit(partial(lm.decode_paged, cfg=cfg))
         self._sample_fn = jax.jit(_sample_rows)
         self.ticks = 0
+        # per-tick decode wall times, ms per live token (width-1 ticks
+        # only — the decode hot path the fused kernel targets)
+        self.decode_ms_per_token: list = []
         self._init_arch(collect_arch_trace, cfg)
 
     # -- queue/active views mirroring the fixed-slot engine's attributes --
@@ -435,9 +443,17 @@ class PagedServingEngine(_ArchTracedEngine):
             n_valid = jnp.asarray(plan.n_valid, jnp.int32)
             tables = jnp.asarray(plan.tables, jnp.int32)
             rng = jnp.stack(plan.keys) if self._stochastic_substrate else None
+            t0 = time.perf_counter()
             logits, self.pages = self._step_fn(
                 self.params, self.pages, tables, tokens, lengths, n_valid,
                 rng=rng)
+            if plan.sc == 1:
+                # decode tick: force completion so the wall time covers
+                # the device step, then normalize per live row
+                logits.block_until_ready()
+                live = sum(1 for nv in plan.n_valid if nv)
+                self.decode_ms_per_token.append(
+                    (time.perf_counter() - t0) * 1e3 / max(live, 1))
             if plan.sample_rows:
                 # One batched sampling call + one host sync per tick: the
                 # (slots, vocab) shapes are tick-invariant, so this stays
@@ -455,6 +471,20 @@ class PagedServingEngine(_ArchTracedEngine):
                     self.scheduler.on_token(slot, seq, toks[slot])
             self.ticks += 1
             return True
+
+    def decode_latency_ms(self):
+        """p50/p95 decode wall ms per token, or None before any decode
+        tick.  The first tick pays jit compilation, so it is dropped
+        whenever at least two samples exist (percentiles over one
+        compile wall would gate nothing but the compiler)."""
+        samples = self.decode_ms_per_token
+        if not samples:
+            return None
+        if len(samples) > 1:
+            samples = samples[1:]
+        arr = np.asarray(samples, np.float64)
+        return {"decode_p50_ms": round(float(np.percentile(arr, 50)), 3),
+                "decode_p95_ms": round(float(np.percentile(arr, 95)), 3)}
 
     def _dummy_sample_key(self):
         return self.scheduler._dummy_key

@@ -21,7 +21,8 @@ BASE = {
     "fused_vs_bitexact": {"shape": [4, 16, 4], "bit_exact": True,
                           "speedup": 73.7, "floor": 0.8},
     "workload": {"mean_interarrival_s": 0.02, "requests": 24},
-    "paged": {"ticks": 17, "evictions": 0},
+    "paged": {"ticks": 17, "evictions": 0, "decode_p50_ms": 0.2,
+              "decode_p95_ms": 0.4},
 }
 
 
@@ -86,6 +87,24 @@ def test_scheduler_counts_tolerate_runner_speed_but_not_blowups():
     cur["paged"]["ticks"] = 17 * 40      # scheduler thrash
     errs = _errors(cur)
     assert len(errs) == 1 and "ticks" in errs[0] and "blew up" in errs[0]
+
+
+def test_latency_drift_tolerated_but_blowup_fails():
+    """`*_ms` decode-latency percentiles get their own tolerance class:
+    runner noise (a few x) passes, a past-tolerance blowup fails, and
+    the knob is independent of --wall-tolerance."""
+    cur = copy.deepcopy(BASE)
+    cur["paged"]["decode_p50_ms"] = 0.2 * 5       # shared-runner noise
+    cur["paged"]["decode_p95_ms"] = 0.4 * 15
+    assert _errors(cur) == []
+    cur["paged"]["decode_p95_ms"] = 0.4 * 50      # kernel got slow
+    errs = _errors(cur)
+    assert len(errs) == 1 and "decode_p95_ms" in errs[0]
+    assert "decode-latency regression" in errs[0]
+    # the latency knob moves independently of the wall knob
+    assert _errors(cur, latency_tolerance=100.0) == []
+    errs = _errors(cur, wall_tolerance=100.0)
+    assert len(errs) == 1 and "decode_p95_ms" in errs[0]
 
 
 def test_workload_config_is_compared_exactly():

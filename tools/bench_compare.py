@@ -18,6 +18,12 @@ Per-metric tolerance classes (suffix-matched on the leaf key):
                             ``--wall-tolerance``x the baseline (default
                             20x — catches accidental complexity blowups,
                             not shared-CI-runner noise);
+* ``*_ms``                — per-token latency (serve decode p50/p95):
+                            lower is better, fail only past
+                            ``--latency-tolerance``x the baseline (its
+                            own knob — latency percentiles over few
+                            smoke-mode decode ticks are noisier than the
+                            bulk wall metrics);
 * ``*speedup*`` / ``*tokens_per_s`` — higher is better: fail below
                             ``--ratio-floor``x baseline (default 0.1x);
 * ``generated_tokens`` / ``ticks`` / ``evictions`` — scheduling counts
@@ -49,6 +55,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
 
 WALL_TOLERANCE = 20.0  # x baseline for *_us / *_s metrics
+LATENCY_TOLERANCE = 20.0  # x baseline for *_ms latency metrics
 RATIO_FLOOR = 0.1  # x baseline for speedup / throughput metrics
 COUNT_SLACK = 5.0  # additive slack for scheduler counts (0 baselines)
 EXACT_RTOL = 1e-6  # float round-off for deterministic metrics
@@ -71,6 +78,8 @@ def classify(path: str) -> str:
         return "exact"
     if "speedup" in key or key.endswith("tokens_per_s"):
         return "higher_better"
+    if key.endswith("_ms"):
+        return "latency"
     if key.endswith("_us") or key.endswith("_s"):
         return "wall"
     if key in _COUNT_KEYS:
@@ -92,7 +101,8 @@ def _leaves(payload, prefix=""):
     return out
 
 
-def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor):
+def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor,
+                latency_tolerance):
     rule = classify(path)
     if rule == "ignore":
         return None
@@ -111,6 +121,12 @@ def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor):
             return (
                 f"{path}: {cur:g} exceeds {wall_tolerance:g}x the "
                 f"baseline {base:g} (wall-clock regression)"
+            )
+    elif rule == "latency":
+        if cur > base * latency_tolerance:
+            return (
+                f"{path}: {cur:g} exceeds {latency_tolerance:g}x the "
+                f"baseline {base:g} (decode-latency regression)"
             )
     elif rule == "higher_better":
         if cur < base * ratio_floor:
@@ -144,6 +160,7 @@ def compare_payloads(
     *,
     wall_tolerance=WALL_TOLERANCE,
     ratio_floor=RATIO_FLOOR,
+    latency_tolerance=LATENCY_TOLERANCE,
 ):
     """Every regression of ``current`` against ``baseline`` (else [])."""
     errors = []
@@ -164,6 +181,7 @@ def compare_payloads(
             cur_leaves[path],
             wall_tolerance=wall_tolerance,
             ratio_floor=ratio_floor,
+            latency_tolerance=latency_tolerance,
         )
         if err:
             errors.append(f"{name}:{err}")
@@ -183,6 +201,9 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--wall-tolerance", type=float, default=WALL_TOLERANCE)
     ap.add_argument("--ratio-floor", type=float, default=RATIO_FLOOR)
+    ap.add_argument(
+        "--latency-tolerance", type=float, default=LATENCY_TOLERANCE
+    )
     args = ap.parse_args(argv)
 
     names = args.files
@@ -227,6 +248,7 @@ def main(argv=None) -> int:
             current,
             wall_tolerance=args.wall_tolerance,
             ratio_floor=args.ratio_floor,
+            latency_tolerance=args.latency_tolerance,
         )
         n_metrics = len(_leaves(baseline))
         status = "FAIL" if file_errors else "OK"
