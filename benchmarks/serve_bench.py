@@ -61,7 +61,11 @@ def build_workload(n_requests: int, vocab: int, *, seed: int,
 
 
 def drive(engine, specs, arrivals):
-    """Feed requests at their arrival times; measure per-request latency."""
+    """Feed requests at their arrival times; measure per-request latency.
+
+    Token and request totals come from the engine's ``repro.obs`` metrics
+    registry — the same counters operators scrape — so the bench numbers
+    and the telemetry can never disagree."""
     reqs = [Request(**dict(s)) for s in specs]      # fresh per engine
     n = len(reqs)
     t0 = time.perf_counter()
@@ -82,15 +86,48 @@ def drive(engine, specs, arrivals):
     makespan = time.perf_counter() - t0
     lat = np.asarray([finish_at[s["rid"]] - arrivals[i]
                       for i, s in enumerate(specs)])
-    tokens = sum(len(r.generated) for r in engine.finished)
+    tokens = int(engine.metrics.value("serve_tokens_generated_total") or 0)
     return {
-        "requests": n,
+        "requests": int(
+            engine.metrics.value("serve_requests_finished_total") or 0),
         "generated_tokens": tokens,
         "makespan_s": round(makespan, 3),
         "tokens_per_s": round(tokens / makespan, 2),
         "latency_p50_s": round(float(np.percentile(lat, 50)), 3),
         "latency_p99_s": round(float(np.percentile(lat, 99)), 3),
     }
+
+
+# Paged-engine lifecycle counters that are DETERMINISTIC for a fixed
+# workload: tokens are a function of each request alone (per-request
+# rng), and with the default full-size pool there are no evictions, so
+# admissions/blocks/prefill totals don't depend on arrival timing.
+# These land under ``telemetry/counters`` in the artifact, where
+# tools/bench_compare.py matches them exactly.  (The fixed-slot engine's
+# token counts are per-tick-rng and timing-dependent — no exact section.)
+_EXACT_COUNTERS = (
+    "serve_requests_submitted_total", "serve_requests_admitted_total",
+    "serve_requests_finished_total", "serve_tokens_generated_total",
+    "serve_evictions_total", "serve_prefill_tokens_total",
+    "serve_kv_blocks_allocated_total", "serve_kv_blocks_freed_total",
+)
+
+
+def telemetry(engine):
+    """Registry-backed subsection of one paged engine's stats: exact
+    lifecycle counters plus drain-time gauges (runtime state, ignored by
+    the regression gate unless ``--check-gauges``)."""
+    counters = {n: int(engine.metrics.value(n) or 0)
+                for n in _EXACT_COUNTERS}
+    return {"counters": counters,
+            "gauges": engine.metrics.snapshot()["gauges"]}
+
+
+def _registry_ticks(engine):
+    m = engine.metrics
+    ticks = int((m.value("serve_ticks_total", kind="prefill") or 0)
+                + (m.value("serve_ticks_total", kind="decode") or 0))
+    return ticks, int(m.value("serve_evictions_total") or 0)
 
 
 def main(argv=None):
@@ -140,9 +177,9 @@ def main(argv=None):
         slots=args.slots, max_len=max_len, seed=args.seed,
         block_size=8, prefill_chunk=chunk))
     paged_stats = drive(paged, specs, arrivals)
-    paged_stats["ticks"] = paged.ticks
-    paged_stats["evictions"] = paged.evictions
+    paged_stats["ticks"], paged_stats["evictions"] = _registry_ticks(paged)
     paged_stats.update(paged.decode_latency_ms() or {})
+    paged_stats["telemetry"] = telemetry(paged)
     paged.close()
     emit("paged.tokens_per_s", paged_stats["tokens_per_s"])
 
@@ -151,9 +188,9 @@ def main(argv=None):
             slots=args.slots, max_len=max_len, seed=args.seed,
             block_size=8, prefill_chunk=chunk))
     fused_stats = drive(fused, specs, arrivals)
-    fused_stats["ticks"] = fused.ticks
-    fused_stats["evictions"] = fused.evictions
+    fused_stats["ticks"], fused_stats["evictions"] = _registry_ticks(fused)
     fused_stats.update(fused.decode_latency_ms() or {})
+    fused_stats["telemetry"] = telemetry(fused)
     fused.close()
     emit("paged_fused.decode_p50_ms", fused_stats.get("decode_p50_ms"))
 

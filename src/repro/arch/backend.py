@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import contextlib
 
+from repro import obs
 from repro.arch import accounting, trace
 from repro.arch.schedule import compile_schedule
 from repro.arch.spec import ArraySpec, DEFAULT_SPEC
@@ -98,6 +99,32 @@ def _numerics(key, x, w, cfg: ScConfig):
     return sc_backends.moment(key, x, w, cfg)
 
 
+def _note_pricing(rec: trace.CallRecord) -> None:
+    """Fold one priced call into the observability hooks: cycle/energy
+    counters in the global registry (disabled by default) and the
+    effective report's headline numbers onto the innermost open trace
+    span — the ``sc.dispatch`` span of the call being priced, when a
+    tracer is installed."""
+    rep = rec.effective_report
+    reg = obs.default_registry()
+    if reg.enabled:
+        reg.counter(
+            "arch_sc_dot_calls_total",
+            "array-backend calls priced at trace time").inc()
+        reg.counter(
+            "arch_cycles_total",
+            "modeled array cycles across priced calls").inc(rep.cycles)
+        reg.counter(
+            "arch_energy_pj_total",
+            "modeled array energy (pJ) across priced calls").inc(
+                rep.energy_pj)
+    tr = obs.current_tracer()
+    if tr is not None and tr.enabled:
+        tr.attr(arch_cycles=rep.cycles,
+                arch_energy_pj=round(rep.energy_pj, 3),
+                arch_shards=rec.shards)
+
+
 @register_backend("array")
 def array(key, x, w, cfg: ScConfig):
     """Array-level execution: schedule + account (trace time), then the
@@ -114,6 +141,7 @@ def array(key, x, w, cfg: ScConfig):
             rec = trace.CallRecord(plan=rec.plan, trace=rec.trace,
                                    report=rec.report, shards=shards)
         trace.record(rec)
+        _note_pricing(rec)
     else:
         # Still validate the mapping (a call that cannot be scheduled on the
         # active spec should fail loudly even when nobody is tracing).

@@ -1,2 +1,3 @@
 from repro.ft.supervisor import (  # noqa: F401
-    FaultInjector, StragglerMonitor, Supervisor, WorkerFailure)
+    EngineHealth, FaultInjector, HealthMonitor, StragglerMonitor,
+    Supervisor, WorkerFailure, engine_health)

@@ -16,6 +16,15 @@ production response — re-dispatch the slice to a hot spare and demote the
 straggler — is modeled by the ``on_straggler`` callback; the default logs
 and continues (the step still completes: synchronous SPMD has no partial
 progress to lose).
+
+Serve-fleet health (ROADMAP item 5 groundwork): :func:`engine_health`
+reads one serving engine's ``repro.obs`` metrics registry into an
+:class:`EngineHealth` snapshot (error rate, queue depth, active rows,
+eviction pressure), and :class:`HealthMonitor` turns a stream of those
+snapshots into degraded/healthy verdicts — real telemetry instead of the
+stub inputs the drain logic will eventually act on.  No drain logic
+lives here yet; a degraded verdict is just the signal a future
+supervisor uses to drain the shard and resume its requests elsewhere.
 """
 
 from __future__ import annotations
@@ -60,6 +69,85 @@ class StragglerMonitor:
                     else self.ema_decay * self.ema
                     + (1 - self.ema_decay) * duration_s)
         return is_straggler
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineHealth:
+    """One serving engine's health, read from its metrics registry."""
+
+    ticks: int = 0
+    errors: int = 0
+    error_rate: float = 0.0          # errors per tick (0 when no ticks)
+    queue_depth: int = 0
+    active_requests: int = 0
+    finished: int = 0
+    evictions: int = 0
+
+
+def engine_health(registry) -> EngineHealth:
+    """Snapshot a serving engine's ``repro.obs`` registry.
+
+    Reads the error-rate and queue-depth series the engines maintain
+    (``serve_errors_total``, ``serve_ticks_total``,
+    ``serve_queue_depth``, ``serve_active_requests``, ...); series the
+    engine never touched read as zero, so a fresh engine is trivially
+    healthy.
+    """
+    def num(name, **labels):
+        v = registry.value(name, **labels)
+        return 0 if v is None else v
+
+    # serve_ticks_total is labeled by kind (prefill/decode)
+    ticks = int(num("serve_ticks_total", kind="prefill")
+                + num("serve_ticks_total", kind="decode"))
+    errors = int(num("serve_errors_total"))
+    return EngineHealth(
+        ticks=ticks,
+        errors=errors,
+        error_rate=errors / ticks if ticks else float(errors > 0),
+        queue_depth=int(num("serve_queue_depth")),
+        active_requests=int(num("serve_active_requests")),
+        finished=int(num("serve_requests_finished_total")),
+        evictions=int(num("serve_evictions_total")),
+    )
+
+
+@dataclasses.dataclass
+class HealthMonitor:
+    """Degraded-shard detector over :class:`EngineHealth` snapshots.
+
+    A shard is DEGRADED when its error rate exceeds ``max_error_rate``
+    or its queue depth exceeds ``max_queue_depth`` for
+    ``patience`` consecutive observations (one hot tick is load, a
+    sustained backlog is a stall).  ``observe`` returns the verdict and
+    appends degraded events to ``events``; acting on the verdict
+    (drain + resume) is deliberately out of scope here.
+    """
+
+    max_error_rate: float = 0.0
+    max_queue_depth: int = 64
+    patience: int = 2
+    events: list = dataclasses.field(default_factory=list)
+    _backlog_streak: int = 0
+
+    def observe(self, health: EngineHealth) -> bool:
+        degraded = False
+        if health.error_rate > self.max_error_rate:
+            degraded = True
+            self.events.append(("error_rate", health))
+        if health.queue_depth > self.max_queue_depth:
+            self._backlog_streak += 1
+            if self._backlog_streak >= self.patience:
+                degraded = True
+                self.events.append(("queue_backlog", health))
+        else:
+            self._backlog_streak = 0
+        return degraded
+
+    def observe_registry(self, registry) -> bool:
+        """Convenience: snapshot + observe in one call (what a fleet
+        supervisor polls per engine per heartbeat)."""
+        return self.observe(engine_health(registry))
 
 
 @dataclasses.dataclass

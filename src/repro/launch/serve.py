@@ -4,6 +4,15 @@
         --requests 8 --slots 4
     PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
         --block-size 8 --max-blocks 64          # paged KV + chunked prefill
+    PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
+        --metrics-out metrics.prom --trace-out trace.jsonl   # telemetry
+
+``--metrics-out`` / ``--trace-out`` turn observability on: the global
+``repro.obs`` registry is enabled (so substrate counters — sc dispatch,
+autotune hits, arch pricing — record too), a tracer is installed for the
+run, and after the drain the Prometheus exposition and span JSONL land
+at the given paths (``.json`` metrics suffix writes the JSON snapshot
+instead).  Render either with ``tools/obs_report.py``.
 """
 
 from __future__ import annotations
@@ -14,6 +23,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import lm, params as params_lib
@@ -53,6 +63,14 @@ def main(argv=None):
                     help="run the fused paged-attention Pallas kernel "
                          "instead of gather+chunk_decode_attention "
                          "(--paged; see docs/kernels.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's metrics after drain: Prometheus "
+                         "text exposition, or the JSON snapshot when PATH "
+                         "ends in .json (enables observability)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write per-request trace spans as JSONL after "
+                         "drain (enables observability; convert with "
+                         "tools/obs_report.py --chrome)")
     args = ap.parse_args(argv)
     if args.paged and args.mesh:
         raise SystemExit("--paged and --mesh are mutually exclusive (the "
@@ -78,18 +96,27 @@ def main(argv=None):
         mesh = make_local_mesh(args.model_parallel)
         rules = sc_shard_rules(mesh)
         print(f"serving on mesh {dict(mesh.shape)}")
+    # Observability: one registry holds the serve-layer AND substrate
+    # series (the engine records into the global default registry, which
+    # the sc/autotune/arch hooks also target), and the installed tracer
+    # collects spans process-wide for the duration of the run.
+    metrics = tracer = None
+    if args.metrics_out or args.trace_out:
+        metrics = obs.enable()
+        tracer = obs.install_tracer(obs.Tracer())
     if args.paged:
         engine = PagedServingEngine(params, cfg, PagedServeConfig(
             slots=args.slots, max_len=args.max_len, seed=args.seed,
             block_size=args.block_size, num_blocks=args.max_blocks,
-            prefill_chunk=args.prefill_chunk))
+            prefill_chunk=args.prefill_chunk),
+            metrics=metrics, tracer=tracer)
         print(f"paged engine: block_size={args.block_size} "
               f"pool={engine.kv.cfg.num_blocks} blocks "
               f"(chunked prefill {args.prefill_chunk})")
     else:
         engine = ServingEngine(params, cfg, ServeConfig(
             slots=args.slots, max_len=args.max_len, seed=args.seed),
-            mesh=mesh, shard_rules=rules)
+            mesh=mesh, shard_rules=rules, metrics=metrics, tracer=tracer)
 
     rng = jax.random.PRNGKey(args.seed + 1)
     for rid in range(args.requests):
@@ -116,6 +143,20 @@ def main(argv=None):
     for r in finished[:4]:
         print(f"  req {r.rid}: prompt[:6]={r.prompt[:6]} "
               f"generated={r.generated}")
+    if args.metrics_out:
+        if args.metrics_out.endswith(".json"):
+            with open(args.metrics_out, "w") as f:
+                f.write(metrics.snapshot_json())
+        else:
+            with open(args.metrics_out, "w") as f:
+                f.write(metrics.exposition())
+        print(f"  metrics -> {args.metrics_out}")
+    if args.trace_out:
+        tracer.write_jsonl(args.trace_out)
+        print(f"  trace   -> {args.trace_out} ({len(tracer.spans)} spans)")
+    if tracer is not None:
+        obs.uninstall_tracer(tracer)
+        obs.disable()
     return finished
 
 

@@ -1,0 +1,33 @@
+"""repro.obs — lightweight, dependency-free observability.
+
+Two primitives, one contract:
+
+* :mod:`repro.obs.metrics` — a **metrics registry**: counters, gauges,
+  and fixed-bucket histograms (p50/p95/p99 estimates), optionally
+  labeled, thread-safe, with Prometheus-style text exposition and a JSON
+  snapshot export.  A process-global default registry exists for
+  substrate-level counters (sc dispatch, autotune cache hits, arch
+  pricing) and is DISABLED by default — every recording call is a single
+  flag check when off, so instrumented hot paths cost nothing until an
+  operator opts in (``obs.enable()`` / ``launch.serve --metrics-out``).
+  Serving engines own their own always-on registry instance
+  (``engine.metrics``) so concurrent engines never mix series.
+* :mod:`repro.obs.trace` — **structured trace spans** (name, wall ns,
+  duration, attrs, parent) recorded by a :class:`~repro.obs.trace.Tracer`,
+  exported as JSONL and convertible to a Chrome ``trace_event`` file
+  (``tools/obs_report.py --chrome``).  A module-global tracer slot lets
+  trace-time instrumentation (sc dispatch, arch pricing) annotate the
+  innermost open span without plumbing handles through jax.
+
+The package imports nothing from the rest of ``repro`` — it sits at the
+bottom of the dependency graph so serve, sc, and arch can all report
+through it.  See ``docs/observability.md`` for the metric catalog and
+span schema.
+"""
+
+from repro.obs.metrics import (                           # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, default_registry,
+    disable, enable, enabled)
+from repro.obs.trace import (                             # noqa: F401
+    NULL_TRACER, Span, Tracer, current_tracer, install_tracer,
+    read_jsonl, to_chrome, uninstall_tracer)

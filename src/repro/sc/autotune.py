@@ -35,6 +35,8 @@ import json
 import os
 import time
 
+from repro import obs
+
 CACHE_VERSION = 1
 DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(__file__),
                                   "autotune_cache.json")
@@ -144,6 +146,24 @@ def reset_cache() -> None:
     _CACHE = None
 
 
+def _note_lookup(kind: str, result: str, tile) -> None:
+    """Telemetry for one tile lookup: a hit/miss counter in the global
+    registry (disabled by default) plus the chosen tile folded into the
+    innermost open trace span — under an instrumented run that is the
+    ``sc.dispatch`` span of the fused backend that asked."""
+    reg = obs.default_registry()
+    if reg.enabled:
+        reg.counter(
+            "sc_autotune_lookups_total",
+            "tile-cache lookups by the fused backends (hit = stored "
+            "measured tile, miss = deterministic heuristic)").inc(
+                kind=kind, result=result)
+    tr = obs.current_tracer()
+    if tr is not None and tr.enabled:
+        tr.attr(sc_autotune=result,
+                sc_tile=str(dataclasses.astuple(tile)))
+
+
 def _pow2_cover(dim: int, cap: int) -> int:
     """Smallest power of two >= dim, clamped to cap (operands pad up)."""
     p = 1
@@ -189,10 +209,13 @@ def get_tile(m: int, k: int, n: int, nbit: int, dtype: str = "float32",
                 block_k=int(entry["block_k"]),
                 lane_words=int(entry["lane_words"]))
             if min(dataclasses.astuple(tile)) >= 1:
+                _note_lookup("matmul", "hit", tile)
                 return tile
         except (KeyError, TypeError, ValueError):
             pass                     # malformed entry -> heuristic
-    return heuristic_tile(m, k, n, nbit)
+    tile = heuristic_tile(m, k, n, nbit)
+    _note_lookup("matmul", "miss", tile)
+    return tile
 
 
 def heuristic_attn_tile(rows: int, block_size: int, head_dim: int,
@@ -233,10 +256,13 @@ def get_attn_tile(rows: int, block_size: int, head_dim: int, nbit: int,
             tile = AttnTile(block_q=int(entry["block_q"]),
                             lane_words=int(entry["lane_words"]))
             if min(dataclasses.astuple(tile)) >= 1:
+                _note_lookup("attn", "hit", tile)
                 return tile
         except (KeyError, TypeError, ValueError):
             pass                     # malformed entry -> heuristic
-    return heuristic_attn_tile(rows, block_size, head_dim, nbit)
+    tile = heuristic_attn_tile(rows, block_size, head_dim, nbit)
+    _note_lookup("attn", "miss", tile)
+    return tile
 
 
 def candidate_tiles(m: int, k: int, n: int, nbit: int) -> list:

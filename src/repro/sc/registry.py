@@ -21,11 +21,13 @@ Adding a backend is a one-file change:
 
 from __future__ import annotations
 
+import contextlib
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.sc.config import ScConfig
 
 _BACKENDS: dict = {}
@@ -117,10 +119,34 @@ def fast_backend(name: str, nbit: int | None = None) -> str:
     return fast
 
 
+def _dispatch_scope(entry: str, backend: str, m: int, k: int, n: int):
+    """Telemetry for one dispatch, recorded at TRACE time — under ``jit``
+    that is once per compiled shape, not once per device call, so the
+    counters measure compilation traffic and the spans measure trace
+    wall-clock.  Both hooks are default-off: the counter goes to the
+    disabled-by-default global registry and the span to the global tracer
+    slot (usually empty), so an uninstrumented run pays two cheap reads.
+    """
+    reg = obs.default_registry()
+    if reg.enabled:
+        reg.counter(
+            "sc_dispatch_total",
+            "sc_dot/sc_dot_rows dispatches at trace time (once per "
+            "compiled shape under jit)").inc(backend=backend, entry=entry)
+    tr = obs.current_tracer()
+    if tr is None or not tr.enabled:
+        return contextlib.nullcontext()
+    return tr.span("sc.dispatch", entry=entry, backend=backend,
+                   m=m, k=k, n=n)
+
+
 def _dispatch(key, x, w, cfg: ScConfig):
     fn = get_backend(cfg.backend)
     lead = x.shape[:-1]
-    y = fn(key, x.reshape(-1, x.shape[-1]), w, cfg)
+    x2 = x.reshape(-1, x.shape[-1])
+    with _dispatch_scope("sc_dot", cfg.backend, x2.shape[0], x2.shape[1],
+                         w.shape[-1]):
+        y = fn(key, x2, w, cfg)
     return y.reshape(*lead, w.shape[-1])
 
 
@@ -165,12 +191,15 @@ def _dispatch_rows(keys, x, w, cfg: ScConfig):
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     k2 = keys.reshape(-1, keys.shape[-1])
-    fn = _ROW_BACKENDS.get(cfg.backend)
-    if fn is not None:
-        y = fn(k2, x2, w, cfg)
-    else:
-        base = get_backend(cfg.backend)
-        y = jax.vmap(lambda kk, xr: base(kk, xr[None, :], w, cfg)[0])(k2, x2)
+    with _dispatch_scope("sc_dot_rows", cfg.backend, x2.shape[0],
+                         x2.shape[1], w.shape[-1]):
+        fn = _ROW_BACKENDS.get(cfg.backend)
+        if fn is not None:
+            y = fn(k2, x2, w, cfg)
+        else:
+            base = get_backend(cfg.backend)
+            y = jax.vmap(
+                lambda kk, xr: base(kk, xr[None, :], w, cfg)[0])(k2, x2)
     return y.reshape(*lead, w.shape[-1])
 
 

@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import lm
 
 
@@ -122,6 +123,19 @@ class _ArchTracedEngine:
             from repro import arch
             self.arch_collector = arch.TraceCollector().install()
 
+    def _init_obs(self, metrics, tracer) -> None:
+        """Engine-local telemetry (``repro.obs``): each engine owns its
+        own always-on metrics registry (``self.metrics``) unless the
+        caller supplies one, so concurrent engines never mix series; the
+        tracer defaults to the always-off ``NULL_TRACER``."""
+        self.metrics = metrics if metrics is not None \
+            else obs.MetricsRegistry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self._m_ticks = self.metrics.counter(
+            "serve_ticks_total", "engine ticks, labeled kind=prefill|decode")
+        self._m_errors = self.metrics.counter(
+            "serve_errors_total", "engine ticks that raised")
+
     def arch_report(self):
         """Aggregate arch cost of everything compiled so far (None when
         trace collection is off or nothing was recorded). NOTE: the
@@ -165,14 +179,21 @@ class _ArchTracedEngine:
         try:
             yield
         except Exception:
+            self._m_errors.inc()
             self.close()
             raise
+
+    def health_snapshot(self) -> dict:
+        """Queue-depth / error-rate view of ``self.metrics`` — the gauges
+        ``ft.supervisor.HealthMonitor`` consumes (ROADMAP item 5)."""
+        from repro.ft import supervisor
+        return dataclasses.asdict(supervisor.engine_health(self.metrics))
 
 
 class ServingEngine(_ArchTracedEngine):
     def __init__(self, params, cfg, scfg: ServeConfig,
                  collect_arch_trace: bool = False, mesh=None,
-                 shard_rules=None):
+                 shard_rules=None, metrics=None, tracer=None):
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -200,6 +221,17 @@ class ServingEngine(_ArchTracedEngine):
         self._prefill = jax.jit(
             partial(lm.prefill, cfg=cfg, max_len=scfg.max_len))
         self._init_arch(collect_arch_trace, cfg)
+        self._init_obs(metrics, tracer)
+        self._m_submitted = self.metrics.counter(
+            "serve_requests_submitted_total", "requests entering the queue")
+        self._m_finished = self.metrics.counter(
+            "serve_requests_finished_total", "requests completed")
+        self._m_generated = self.metrics.counter(
+            "serve_tokens_generated_total", "tokens sampled across requests")
+        self._g_queue = self.metrics.gauge(
+            "serve_queue_depth", "requests waiting")
+        self._g_active = self.metrics.gauge(
+            "serve_active_requests", "requests holding a slot")
 
     def _substrate_scope(self):
         """Mesh scope entered around prefill/decode so their TRACING (the
@@ -216,6 +248,10 @@ class ServingEngine(_ArchTracedEngine):
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
+        self._m_submitted.inc()
+        self._g_queue.set(len(self.queue))
+        self.tracer.event("request.submit", rid=req.rid,
+                          prompt_tokens=len(req.prompt))
 
     def _splice_slot(self, slot: int, cache1, length, last_tok):
         """Write a batch=1 prefill cache into batch row ``slot``."""
@@ -243,6 +279,11 @@ class ServingEngine(_ArchTracedEngine):
                 req.generated.append(int(tok[0]))
                 self.active[slot] = req
                 self._splice_slot(slot, cache1, int(lens[0]), int(tok[0]))
+                self._m_generated.inc()
+                self._g_queue.set(len(self.queue))
+                self._g_active.set(sum(r is not None for r in self.active))
+                self.tracer.event("request.admit", rid=req.rid, slot=slot,
+                                  resumed=False)
 
     def _sample(self, logits, temperature: float):
         """Sample one admission's tokens (batch=1 prefill logits)."""
@@ -278,6 +319,7 @@ class ServingEngine(_ArchTracedEngine):
         self._admit()
         if not any(r is not None for r in self.active):
             return False
+        self._m_ticks.inc(kind="decode")
         with self._substrate_scope():
             if self._stochastic_substrate:
                 logits, self.cache = self._decode(
@@ -297,6 +339,7 @@ class ServingEngine(_ArchTracedEngine):
                 continue
             tok = int(toks[slot])
             req.generated.append(tok)
+            self._m_generated.inc()
             hit_eos = tok == self.scfg.eos_id
             hit_max = len(req.generated) >= req.max_new_tokens
             hit_cap = int(self.lengths[slot]) >= self.scfg.max_len - 1
@@ -308,6 +351,10 @@ class ServingEngine(_ArchTracedEngine):
                 self.finished.append(req)
                 self.active[slot] = None
                 self.lengths = self.lengths.at[slot].set(0)
+                self._m_finished.inc()
+                self._g_active.set(sum(r is not None for r in self.active))
+                self.tracer.event("request.finish", rid=req.rid,
+                                  generated=len(req.generated))
         return True
 
     def run_until_drained(self, max_ticks: int = 10_000):
@@ -361,7 +408,8 @@ class PagedServingEngine(_ArchTracedEngine):
     """
 
     def __init__(self, params, cfg, scfg: PagedServeConfig,
-                 collect_arch_trace: bool = False):
+                 collect_arch_trace: bool = False, metrics=None,
+                 tracer=None):
         from repro.serve import kv_cache as kvc
         from repro.serve import scheduler as sched
         if cfg.family in ("ssm", "hybrid"):
@@ -372,6 +420,7 @@ class PagedServingEngine(_ArchTracedEngine):
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
+        self._init_obs(metrics, tracer)
         num_blocks = scfg.num_blocks or kvc.default_num_blocks(
             scfg.slots, scfg.max_len, scfg.block_size)
         pcfg = kvc.PagedCacheConfig(num_blocks=num_blocks,
@@ -382,11 +431,12 @@ class PagedServingEngine(_ArchTracedEngine):
                 f"num_blocks={num_blocks} cannot hold even one max_len="
                 f"{scfg.max_len} sequence (+1 null block) at block_size="
                 f"{scfg.block_size}; need >= {1 + pcfg.blocks_per_seq}")
-        self.kv = kvc.PagedKVCache(pcfg)
+        self.kv = kvc.PagedKVCache(pcfg, metrics=self.metrics)
         self.pages = lm.init_paged_cache(cfg, num_blocks, scfg.block_size)
         self.scheduler = sched.Scheduler(
             scfg, self.kv, base_key=jax.random.PRNGKey(scfg.seed),
-            on_finish=self._on_finish)
+            on_finish=self._on_finish, metrics=self.metrics,
+            tracer=self.tracer)
         # fused_sc attention draws per-token stochastic logits even when
         # the dense substrate is exact, so it needs per-request keys too
         self._stochastic_substrate = (
@@ -395,9 +445,19 @@ class PagedServingEngine(_ArchTracedEngine):
         self._step_fn = jax.jit(partial(lm.decode_paged, cfg=cfg))
         self._sample_fn = jax.jit(_sample_rows)
         self.ticks = 0
-        # per-tick decode wall times, ms per live token (width-1 ticks
-        # only — the decode hot path the fused kernel targets)
-        self.decode_ms_per_token: list = []
+        self._seen_decode_tick = False
+        # Per-tick decode wall times (ms per live token, width-1 ticks
+        # only — the decode hot path the fused kernel targets) land in a
+        # fixed-bucket histogram; ``decode_latency_ms()`` is a view over
+        # it.  The first decode tick pays jit compilation and is counted
+        # separately instead of polluting the latency series.
+        self._decode_hist = self.metrics.histogram(
+            "serve_decode_ms_per_token",
+            "decode wall ms per live token (width-1 ticks, jit tick "
+            "dropped)")
+        self._m_jit_ticks = self.metrics.counter(
+            "serve_decode_jit_ticks_total",
+            "decode ticks excluded from the latency series (compile wall)")
         self._init_arch(collect_arch_trace, cfg)
 
     # -- queue/active views mirroring the fixed-slot engine's attributes --
@@ -438,53 +498,66 @@ class PagedServingEngine(_ArchTracedEngine):
                 raise RuntimeError(
                     "scheduler produced a no-progress tick (every row "
                     "deferred) — the block pool is mis-sized")
-            tokens = jnp.asarray(plan.tokens, jnp.int32)
-            lengths = jnp.asarray(plan.lengths, jnp.int32)
-            n_valid = jnp.asarray(plan.n_valid, jnp.int32)
-            tables = jnp.asarray(plan.tables, jnp.int32)
-            rng = jnp.stack(plan.keys) if self._stochastic_substrate else None
-            t0 = time.perf_counter()
-            logits, self.pages = self._step_fn(
-                self.params, self.pages, tables, tokens, lengths, n_valid,
-                rng=rng)
-            if plan.sc == 1:
-                # decode tick: force completion so the wall time covers
-                # the device step, then normalize per live row
-                logits.block_until_ready()
-                live = sum(1 for nv in plan.n_valid if nv)
-                self.decode_ms_per_token.append(
-                    (time.perf_counter() - t0) * 1e3 / max(live, 1))
-            if plan.sample_rows:
-                # One batched sampling call + one host sync per tick: the
-                # (slots, vocab) shapes are tick-invariant, so this stays
-                # a single compiled executable.  Non-sampling slots get
-                # dummy keys and their outputs are discarded.
-                keys = [self._dummy_sample_key()] * len(plan.tokens)
-                temps = [0.0] * len(plan.tokens)
-                for slot, seq in plan.sample_rows:
-                    keys[slot] = self.scheduler.sample_key(seq)
-                    temps[slot] = seq.req.temperature
-                toks = np.asarray(self._sample_fn(
-                    jnp.stack(keys), logits,
-                    jnp.asarray(temps, jnp.float32))).tolist()   # one sync
-                for slot, seq in plan.sample_rows:
-                    self.scheduler.on_token(slot, seq, toks[slot])
+            kind = "decode" if plan.sc == 1 else "prefill"
+            live = sum(1 for nv in plan.n_valid if nv)
+            self._m_ticks.inc(kind=kind)
+            with self.tracer.span("engine.tick", tick=self.ticks,
+                                  kind=kind, live=live, width=plan.sc):
+                self._run_plan(plan, live)
             self.ticks += 1
             return True
 
+    def _run_plan(self, plan, live: int):
+        tokens = jnp.asarray(plan.tokens, jnp.int32)
+        lengths = jnp.asarray(plan.lengths, jnp.int32)
+        n_valid = jnp.asarray(plan.n_valid, jnp.int32)
+        tables = jnp.asarray(plan.tables, jnp.int32)
+        rng = jnp.stack(plan.keys) if self._stochastic_substrate else None
+        t0 = time.perf_counter()
+        logits, self.pages = self._step_fn(
+            self.params, self.pages, tables, tokens, lengths, n_valid,
+            rng=rng)
+        if plan.sc == 1:
+            # decode tick: force completion so the wall time covers
+            # the device step, then normalize per live row.  The first
+            # decode tick is the jit compile — count it, don't time it.
+            logits.block_until_ready()
+            ms = (time.perf_counter() - t0) * 1e3 / max(live, 1)
+            if self._seen_decode_tick:
+                self._decode_hist.observe(ms)
+            else:
+                self._seen_decode_tick = True
+                self._m_jit_ticks.inc()
+            self.tracer.attr(decode_ms_per_token=round(ms, 4))
+        if plan.sample_rows:
+            # One batched sampling call + one host sync per tick: the
+            # (slots, vocab) shapes are tick-invariant, so this stays
+            # a single compiled executable.  Non-sampling slots get
+            # dummy keys and their outputs are discarded.
+            keys = [self._dummy_sample_key()] * len(plan.tokens)
+            temps = [0.0] * len(plan.tokens)
+            for slot, seq in plan.sample_rows:
+                keys[slot] = self.scheduler.sample_key(seq)
+                temps[slot] = seq.req.temperature
+            toks = np.asarray(self._sample_fn(
+                jnp.stack(keys), logits,
+                jnp.asarray(temps, jnp.float32))).tolist()   # one sync
+            for slot, seq in plan.sample_rows:
+                self.scheduler.on_token(slot, seq, toks[slot])
+
     def decode_latency_ms(self):
-        """p50/p95 decode wall ms per token, or None before any decode
-        tick.  The first tick pays jit compilation, so it is dropped
-        whenever at least two samples exist (percentiles over one
-        compile wall would gate nothing but the compiler)."""
-        samples = self.decode_ms_per_token
-        if not samples:
+        """p50/p95 decode wall ms per token — a view over the
+        ``serve_decode_ms_per_token`` histogram in ``self.metrics``.
+
+        The first decode tick pays jit compilation and is never
+        recorded; with fewer than TWO recorded ticks after that drop the
+        result is None (percentiles over zero samples are undefined, and
+        over one sample they gate nothing but scheduling noise)."""
+        h = self._decode_hist
+        if h.count() < 2:
             return None
-        if len(samples) > 1:
-            samples = samples[1:]
-        arr = np.asarray(samples, np.float64)
-        return {"decode_p50_ms": round(float(np.percentile(arr, 50)), 3),
-                "decode_p95_ms": round(float(np.percentile(arr, 95)), 3)}
+        return {"decode_p50_ms": round(h.percentile(50), 3),
+                "decode_p95_ms": round(h.percentile(95), 3)}
 
     def _dummy_sample_key(self):
         return self.scheduler._dummy_key

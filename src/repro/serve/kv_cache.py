@@ -103,12 +103,37 @@ class PagedKVCache:
     Device tensors (the per-layer page pools) are owned by the engine —
     this class tracks which blocks belong to which sequence and hands out
     padded block-table rows for the jitted step.
+
+    With a ``metrics`` registry (``repro.obs``), every alloc/free updates
+    the block-pool series: ``serve_kv_blocks_allocated_total`` /
+    ``serve_kv_blocks_freed_total`` counters plus ``serve_kv_blocks_free``
+    and ``serve_kv_block_occupancy`` gauges — the pool-pressure signals
+    the eviction policy and ROADMAP item 1's prefix cache are judged by.
     """
 
-    def __init__(self, cfg: PagedCacheConfig):
+    def __init__(self, cfg: PagedCacheConfig, metrics=None):
         self.cfg = cfg
         self.pool = BlockPool(cfg.num_blocks)
         self.tables: dict[int, list[int]] = {}      # seq id -> block ids
+        self._m_alloc = self._m_freed = None
+        if metrics is not None:
+            self._m_alloc = metrics.counter(
+                "serve_kv_blocks_allocated_total",
+                "KV pool blocks handed to sequences")
+            self._m_freed = metrics.counter(
+                "serve_kv_blocks_freed_total",
+                "KV pool blocks returned by finished/evicted sequences")
+            self._g_free = metrics.gauge(
+                "serve_kv_blocks_free", "allocatable KV blocks currently free")
+            self._g_occ = metrics.gauge(
+                "serve_kv_block_occupancy",
+                "fraction of allocatable KV blocks mapped by sequences")
+            self._update_gauges()
+
+    def _update_gauges(self) -> None:
+        if self._m_alloc is not None:
+            self._g_free.set(self.pool.free_blocks)
+            self._g_occ.set(round(self.utilization(), 6))
 
     # ------------------------------------------------------------------
     @property
@@ -140,12 +165,18 @@ class PagedKVCache:
         if got is None:
             return False
         table.extend(got)
+        if self._m_alloc is not None:
+            self._m_alloc.inc(need)
+            self._update_gauges()
         return True
 
     def release(self, seq_id: int) -> int:
         """Free every block of ``seq_id``; returns how many were freed."""
         table = self.tables.pop(seq_id, [])
         self.pool.free(table)
+        if self._m_freed is not None and table:
+            self._m_freed.inc(len(table))
+            self._update_gauges()
         return len(table)
 
     def table_row(self, seq_id: int) -> list[int]:

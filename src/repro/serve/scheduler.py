@@ -47,6 +47,12 @@ class Sequence:
     key: object                     # raw (2,) uint32 per-request key
     fed: int = 0                    # context tokens already in the cache
     pending: list = dataclasses.field(default_factory=list)
+    # True while the row is feeding context (prompt, or prompt+generated
+    # after an eviction); flips False once the context is consumed and
+    # the row switches to one-token decode feeds.  Pure observability
+    # state: it distinguishes prefill-chunk trace events from decode
+    # feeds and never influences scheduling.
+    prefilling: bool = True
 
     @property
     def context_len(self) -> int:
@@ -56,6 +62,7 @@ class Sequence:
         """Eviction: drop cache state, keep tokens; re-prefill everything."""
         self.fed = 0
         self.pending = list(self.req.prompt) + list(self.req.generated)
+        self.prefilling = True
 
 
 @dataclasses.dataclass
@@ -72,9 +79,20 @@ class TickPlan:
 
 
 class Scheduler:
-    """Owns the waiting queue, the row grid, and the block allocator."""
+    """Owns the waiting queue, the row grid, and the block allocator.
 
-    def __init__(self, scfg, kv: PagedKVCache, base_key, on_finish=None):
+    ``metrics`` (a ``repro.obs`` registry) and ``tracer`` are the
+    observability hooks: the scheduler owns the request-lifecycle
+    counters (submitted/admitted/finished/evicted) and emits the
+    lifecycle trace events — ``request.submit`` / ``request.admit`` /
+    ``request.evict`` / ``request.finish`` plus one ``prefill.chunk``
+    event per context chunk fed.  Both default to always-off stand-ins,
+    so an uninstrumented scheduler pays one attribute check per site.
+    """
+
+    def __init__(self, scfg, kv: PagedKVCache, base_key, on_finish=None,
+                 metrics=None, tracer=None):
+        from repro import obs
         self.scfg = scfg
         self.kv = kv
         self.base_key = base_key
@@ -85,6 +103,31 @@ class Scheduler:
         self.finished: list = []
         self.evictions = 0
         self._dummy_key = jax.random.PRNGKey(0)
+        m = metrics if metrics is not None else obs.MetricsRegistry(
+            enabled=False)
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self._m_submitted = m.counter(
+            "serve_requests_submitted_total", "requests entering the queue")
+        self._m_admitted = m.counter(
+            "serve_requests_admitted_total",
+            "admissions onto a batch row (re-admissions after eviction "
+            "count again)")
+        self._m_finished = m.counter(
+            "serve_requests_finished_total", "requests completed")
+        self._m_evicted = m.counter(
+            "serve_evictions_total", "LIFO recompute evictions")
+        self._m_prefill_tok = m.counter(
+            "serve_prefill_tokens_total",
+            "context tokens fed through prefill chunks (resumes re-count)")
+        self._m_generated = m.counter(
+            "serve_tokens_generated_total", "tokens sampled across requests")
+        self._g_queue = m.gauge("serve_queue_depth", "requests waiting")
+        self._g_active = m.gauge(
+            "serve_active_requests", "requests holding a batch row")
+
+    def _update_gauges(self) -> None:
+        self._g_queue.set(len(self.waiting))
+        self._g_active.set(self.active_count)
 
     # ------------------------------------------------------------------
     def submit(self, req) -> None:
@@ -95,6 +138,10 @@ class Scheduler:
         seq = Sequence(req=req, key=key,
                        pending=list(req.prompt) + list(req.generated))
         self.waiting.append(seq)
+        self._m_submitted.inc()
+        self._update_gauges()
+        self.tracer.event("request.submit", rid=req.rid,
+                          prompt_tokens=len(req.prompt))
 
     def has_work(self) -> bool:
         return bool(self.waiting) or any(r is not None for r in self.rows)
@@ -119,6 +166,10 @@ class Scheduler:
             victim.reset_for_recompute()
             self.waiting.appendleft(victim)
             self.evictions += 1
+            self._m_evicted.inc()
+            self._update_gauges()
+            self.tracer.event("request.evict", rid=victim.req.rid,
+                              generated=len(victim.req.generated))
             return slot
         return None
 
@@ -134,6 +185,10 @@ class Scheduler:
             self.kv.ensure(seq.req.rid, first)
             self.rows[slot] = seq
             self.admit_stack.append(seq)
+            self._m_admitted.inc()
+            self._update_gauges()
+            self.tracer.event("request.admit", rid=seq.req.rid, slot=slot,
+                              resumed=bool(seq.req.generated))
 
     # ------------------------------------------------------------------
     def plan(self) -> TickPlan | None:
@@ -198,6 +253,12 @@ class Scheduler:
             tables.append(self.kv.table_row(seq.req.rid))
             keys.append(seq.key)
             seq.fed += n
+            if n and seq.prefilling:
+                self._m_prefill_tok.inc(n)
+                self.tracer.event("prefill.chunk", rid=seq.req.rid,
+                                  tokens=n, fed=seq.fed)
+                if not seq.pending:
+                    seq.prefilling = False
             if n and not seq.pending:
                 sample_rows.append((slot, seq))
         return TickPlan(sc=sc, tokens=tokens, lengths=lengths,
@@ -215,6 +276,7 @@ class Scheduler:
     def on_token(self, slot: int, seq: Sequence, token: int) -> None:
         """Record a sampled token and finish or continue the row."""
         seq.req.generated.append(token)
+        self._m_generated.inc()
         hit_eos = token == self.scfg.eos_id
         hit_max = len(seq.req.generated) >= seq.req.max_new_tokens
         hit_cap = seq.fed >= self.scfg.max_len - 1
@@ -230,5 +292,9 @@ class Scheduler:
         if seq in self.admit_stack:
             self.admit_stack.remove(seq)
         self.finished.append(seq.req)
+        self._m_finished.inc()
+        self._update_gauges()
+        self.tracer.event("request.finish", rid=seq.req.rid,
+                          generated=len(seq.req.generated))
         if self.on_finish is not None:
             self.on_finish(seq.req)

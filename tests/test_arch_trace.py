@@ -1,0 +1,89 @@
+"""TraceCollector request-stamping edge cases: zero recorded calls,
+overlapping request ids, and the note_request/cost_per_request contract
+the serving engines rely on for per-request cost attribution."""
+
+import jax
+
+from repro.arch import backend as arch_backend
+from repro.arch import trace
+from repro.sc.config import ScConfig
+from repro.sc.registry import sc_dot
+
+
+def test_cost_per_request_no_stamps_is_empty():
+    c = trace.TraceCollector()
+    assert c.cost_per_request() == {}
+
+
+def test_cost_per_request_zero_sc_dot_calls():
+    """Requests stamped but nothing recorded (e.g. an exact-substrate
+    engine whose matmuls never hit the array backend): the prorated costs
+    exist per stamped request, with zero cycles/energy — merge_reports
+    over an empty record list is the all-zero report, not a crash."""
+    c = trace.TraceCollector()
+    c.note_request(0, 10)
+    c.note_request(1, 30)
+    agg = c.aggregate()
+    assert agg.cycles == 0 and agg.energy_pj == 0.0
+    costs = c.cost_per_request()
+    assert set(costs) == {0, 1}
+    assert costs[0]["share"] == 0.25 and costs[1]["share"] == 0.75
+    assert costs[0]["cycles"] == 0.0 and costs[1]["energy_pj"] == 0.0
+
+
+def test_cost_per_request_zero_total_tokens():
+    """Stamps that sum to zero tokens cannot be prorated — empty dict,
+    never a divide-by-zero."""
+    c = trace.TraceCollector()
+    c.note_request(0, 0)
+    assert c.cost_per_request() == {}
+
+
+def test_note_request_overlapping_ids_last_stamp_wins():
+    """Re-stamping an id overwrites (an evicted-and-resumed request
+    finishes once, but defensive callers may stamp twice): shares follow
+    the LAST token count per id, and ids never double-count."""
+    c = trace.TraceCollector()
+    c.note_request(7, 5)
+    c.note_request(7, 20)        # resume finished with more context
+    c.note_request(8, 20)
+    assert c.request_tokens == {7: 20, 8: 20}
+    costs = c.cost_per_request()
+    assert costs[7]["share"] == 0.5 == costs[8]["share"]
+
+
+def test_cost_per_request_prorates_recorded_calls():
+    """With real records, prorated cycles/energy sum back to the
+    aggregate (up to the rounding in cost_per_request)."""
+    cfg = ScConfig(backend="array", nbit=64)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (4, 8))
+    w = jax.random.uniform(key, (8, 4))
+    c = trace.TraceCollector().install()
+    try:
+        sc_dot(key, x, w, cfg)
+    finally:
+        c.uninstall()
+    assert len(c.records) == 1
+    c.note_request(0, 30)
+    c.note_request(1, 10)
+    agg = c.aggregate()
+    assert agg.cycles > 0
+    costs = c.cost_per_request()
+    assert abs(sum(v["cycles"] for v in costs.values()) - agg.cycles) < 0.5
+    assert abs(sum(v["energy_pj"] for v in costs.values())
+               - agg.energy_pj) < 0.01
+    assert costs[0]["cycles"] > costs[1]["cycles"]
+
+
+def test_schedule_call_matches_collected_record():
+    """schedule_call standalone prices the same call the collector hears
+    from a dispatch (same shape, same spec -> same report)."""
+    cfg = ScConfig(backend="array", nbit=64)
+    key = jax.random.PRNGKey(1)
+    x = jax.random.uniform(key, (2, 8))
+    w = jax.random.uniform(key, (8, 2))
+    with trace.collect() as records:
+        sc_dot(key, x, w, cfg)
+    standalone = arch_backend.schedule_call(2, 8, 2, 64)
+    assert records[0].report == standalone.report

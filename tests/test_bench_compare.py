@@ -22,7 +22,13 @@ BASE = {
                           "speedup": 73.7, "floor": 0.8},
     "workload": {"mean_interarrival_s": 0.02, "requests": 24},
     "paged": {"ticks": 17, "evictions": 0, "decode_p50_ms": 0.2,
-              "decode_p95_ms": 0.4},
+              "decode_p95_ms": 0.4,
+              "telemetry": {
+                  "counters": {"serve_tokens_generated_total": 45,
+                               "serve_evictions_total": 0,
+                               "serve_ticks_total{kind=decode}": 12},
+                  "gauges": {"serve_queue_depth": 0,
+                             "serve_kv_blocks_free": 32}}},
 }
 
 
@@ -116,6 +122,45 @@ def test_workload_config_is_compared_exactly():
     errs = _errors(cur)
     assert len(errs) == 1 and "mean_interarrival_s" in errs[0]
     assert "deterministic" in errs[0]
+
+
+def test_registry_counters_compare_exactly():
+    """`*_total`/`*_count` leaves are lifecycle counters exported from the
+    obs registries: deterministic for a fixed workload, so ANY drift fails
+    — even a drift that the count class would wave through."""
+    cur = copy.deepcopy(BASE)
+    t = cur["paged"]["telemetry"]["counters"]
+    t["serve_tokens_generated_total"] = 46         # off by one
+    errs = _errors(cur)
+    assert len(errs) == 1 and "serve_tokens_generated_total" in errs[0]
+    assert "lifecycle counter" in errs[0]
+
+
+def test_labeled_counter_series_strip_labels_before_classifying():
+    """A flattened series name like `serve_ticks_total{kind=decode}` still
+    classifies as a counter (the label suffix is stripped first)."""
+    assert bench_compare.classify(
+        "paged/telemetry/counters/serve_ticks_total{kind=decode}") \
+        == "counter"
+    cur = copy.deepcopy(BASE)
+    cur["paged"]["telemetry"]["counters"]["serve_ticks_total{kind=decode}"] \
+        = 13
+    errs = _errors(cur)
+    assert len(errs) == 1 and "kind=decode" in errs[0]
+
+
+def test_gauges_ignored_by_default_but_gated_on_opt_in():
+    """gauges/... leaves are runtime state: drift AND disappearance pass
+    by default; --check-gauges turns them into exact comparisons."""
+    cur = copy.deepcopy(BASE)
+    cur["paged"]["telemetry"]["gauges"]["serve_queue_depth"] = 3
+    del cur["paged"]["telemetry"]["gauges"]["serve_kv_blocks_free"]
+    assert _errors(cur) == []
+    errs = _errors(cur, check_gauges=True)
+    assert len(errs) == 2
+    assert any("serve_queue_depth" in e and "registry gauge" in e
+               for e in errs)
+    assert any("serve_kv_blocks_free" in e and "missing" in e for e in errs)
 
 
 def test_notes_are_ignored():

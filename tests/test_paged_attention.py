@@ -417,7 +417,10 @@ def test_engine_records_decode_latency(key):
     cfg = _cfg(paged_attn="fused")
     params = P.init_params(key, lm.lm_param_specs(cfg), cfg.param_dtype)
     eng, _ = _run_paged(params, cfg, [Request(**REQ1)], slots=1)
-    assert eng.decode_ms_per_token, "decode ticks must be timed"
+    # max_new=5 -> 4 decode ticks; the jit tick drops, 3 land in the
+    # histogram the latency view reads from
+    assert eng.metrics.histogram("serve_decode_ms_per_token").count() >= 2, \
+        "decode ticks must be timed"
     lat = eng.decode_latency_ms()
     assert set(lat) == {"decode_p50_ms", "decode_p95_ms"}
     assert 0 < lat["decode_p50_ms"] <= lat["decode_p95_ms"] * (1 + 1e-9)

@@ -35,6 +35,14 @@ Per-metric tolerance classes (suffix-matched on the leaf key):
 * ``workload/...``        — benchmark *configuration*: exact regardless
                             of suffix (a changed workload is a changed
                             benchmark, not a measurement);
+* ``*_total`` / ``*_count`` — lifecycle counters exported from the
+                            ``repro.obs`` registries (label suffixes like
+                            ``{kind=decode}`` are stripped first): exact —
+                            the benches only export counters whose totals
+                            are deterministic for a fixed workload;
+* ``gauges/...``          — registry gauges are point-in-time runtime
+                            state (queue depth, pool occupancy at drain):
+                            ignored unless ``--check-gauges``;
 * everything else         — deterministic (modeled cycles/energy, shapes,
                             nbit, flags): exact, to float round-off.
 
@@ -71,11 +79,15 @@ def classify(path: str) -> str:
     cannot quietly move a headline metric by changing the workload
     underneath it (e.g. ``workload/mean_interarrival_s``).
     """
-    key = path.rsplit("/", 1)[-1]
+    key = path.rsplit("/", 1)[-1].split("{", 1)[0]   # strip label sets
     if key == "note":
         return "ignore"
     if "workload/" in path or path.startswith("workload"):
         return "exact"
+    if "gauges/" in path or path.startswith("gauges"):
+        return "gauge"
+    if key.endswith("_total") or key.endswith("_count"):
+        return "counter"
     if "speedup" in key or key.endswith("tokens_per_s"):
         return "higher_better"
     if key.endswith("_ms"):
@@ -105,6 +117,23 @@ def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor,
                 latency_tolerance):
     rule = classify(path)
     if rule == "ignore":
+        return None
+    if rule == "counter":
+        # registry counters: exact (the benches only export ones that are
+        # deterministic for a fixed workload — see serve_bench.telemetry)
+        if cur != base:
+            return (
+                f"{path}: {cur!r} != baseline {base!r} "
+                "(lifecycle counter changed)"
+            )
+        return None
+    if rule == "gauge":
+        # opted in via --check-gauges: exact, same as counters
+        if cur != base:
+            return (
+                f"{path}: {cur!r} != baseline {base!r} "
+                "(registry gauge changed)"
+            )
         return None
     if isinstance(base, bool) or not isinstance(base, (int, float)):
         # flags, strings, shape lists: deterministic structure
@@ -161,13 +190,19 @@ def compare_payloads(
     wall_tolerance=WALL_TOLERANCE,
     ratio_floor=RATIO_FLOOR,
     latency_tolerance=LATENCY_TOLERANCE,
+    check_gauges=False,
 ):
-    """Every regression of ``current`` against ``baseline`` (else [])."""
+    """Every regression of ``current`` against ``baseline`` (else []).
+
+    ``check_gauges`` opts the ``gauges/...`` leaves into the comparison;
+    by default they are runtime state and skipped entirely (missing
+    gauges are not regressions either)."""
     errors = []
     base_leaves = _leaves(baseline)
     cur_leaves = _leaves(current)
     for path in sorted(base_leaves):
-        if classify(path) == "ignore":
+        rule = classify(path)
+        if rule == "ignore" or (rule == "gauge" and not check_gauges):
             continue
         if path not in cur_leaves:
             errors.append(
@@ -203,6 +238,11 @@ def main(argv=None) -> int:
     ap.add_argument("--ratio-floor", type=float, default=RATIO_FLOOR)
     ap.add_argument(
         "--latency-tolerance", type=float, default=LATENCY_TOLERANCE
+    )
+    ap.add_argument(
+        "--check-gauges",
+        action="store_true",
+        help="compare gauges/... leaves exactly instead of skipping them",
     )
     args = ap.parse_args(argv)
 
@@ -249,6 +289,7 @@ def main(argv=None) -> int:
             wall_tolerance=args.wall_tolerance,
             ratio_floor=args.ratio_floor,
             latency_tolerance=args.latency_tolerance,
+            check_gauges=args.check_gauges,
         )
         n_metrics = len(_leaves(baseline))
         status = "FAIL" if file_errors else "OK"

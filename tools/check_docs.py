@@ -26,7 +26,8 @@ FENCE_RE = re.compile(r"^```(\w*)\s*$")
 
 # Files whose links are checked.
 LINK_FILES = ["README.md", "docs/paper_map.md", "docs/backends.md",
-              "docs/scaling.md", "docs/serving.md", "docs/kernels.md"]
+              "docs/scaling.md", "docs/serving.md", "docs/kernels.md",
+              "docs/observability.md"]
 # Files whose ```python blocks are executed.
 SNIPPET_FILES = ["docs/backends.md", "docs/scaling.md"]
 

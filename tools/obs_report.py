@@ -1,0 +1,234 @@
+"""Render, diff, and convert ``repro.obs`` telemetry artifacts.
+
+One CLI for the three things an operator does with the files
+``launch.serve --metrics-out/--trace-out`` (or any registry/tracer)
+produce:
+
+    python tools/obs_report.py metrics.prom              # snapshot table
+    python tools/obs_report.py metrics.json before.json  # diff (cur, base)
+    python tools/obs_report.py metrics.prom \
+        --require serve_requests_finished_total ...      # CI assertion
+    python tools/obs_report.py --chrome trace.jsonl -o trace.json
+
+Metrics load from either format: a ``.json`` file is the registry's
+:meth:`~repro.obs.MetricsRegistry.snapshot` verbatim, anything else
+parses as Prometheus text exposition (``# TYPE`` lines give the kind;
+histograms reassemble from their ``_bucket``/``_sum``/``_count``
+series, keeping count and sum — the quantile estimates only live in the
+JSON snapshot).  ``--require`` matches metric *names* (label sets
+stripped), so it asserts "this series family was emitted" without
+pinning label values.  ``--chrome`` converts a span JSONL into a Chrome
+``trace_event`` file for chrome://tracing or https://ui.perfetto.dev.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs import trace as obs_trace  # noqa: E402
+
+_TYPE_RE = re.compile(r"^# TYPE (\S+) (\S+)\s*$")
+_SAMPLE_RE = re.compile(r"^([A-Za-z_:][A-Za-z0-9_:]*)(\{[^}]*\})?\s+(\S+)$")
+
+
+def _num(s: str):
+    v = float(s)
+    return int(v) if v.is_integer() else v
+
+
+def parse_exposition(text: str) -> dict:
+    """Prometheus text -> the registry snapshot shape (counters/gauges/
+    histograms).  Histogram quantiles are not in the exposition, so the
+    reassembled entries carry count/sum only."""
+    kinds: dict = {}
+    out: dict = {"counters": {}, "gauges": {}, "histograms": {}}
+    hist: dict = {}                      # series name -> {count, sum}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        m = _TYPE_RE.match(line)
+        if m:
+            kinds[m.group(1)] = m.group(2)
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"unparseable exposition line: {line!r}")
+        name, labels, value = m.group(1), m.group(2) or "", m.group(3)
+        for base, suffix in ((name[:-7], "_bucket"), (name[:-4], "_sum"),
+                             (name[:-6], "_count")):
+            if name.endswith(suffix) and kinds.get(base) == "histogram":
+                if suffix == "_bucket":
+                    labels = re.sub(r",?le=\"[^\"]*\"", "", labels)
+                    labels = "" if labels in ("{}", "{,}") else labels
+                    break                # cumulative; count line has total
+                series = base + _strip_quotes(labels)
+                hist.setdefault(series, {})[suffix[1:]] = _num(value)
+                break
+        else:
+            kind = kinds.get(name, "gauge")
+            section = "counters" if kind == "counter" else "gauges"
+            out[section][name + _strip_quotes(labels)] = _num(value)
+    out["histograms"] = hist
+    return out
+
+
+def _strip_quotes(labels: str) -> str:
+    """``{k="v",...}`` -> the snapshot's ``{k=v,...}`` form."""
+    if not labels:
+        return ""
+    return labels.replace('"', "")
+
+
+def load_snapshot(path: str) -> dict:
+    with open(path) as f:
+        text = f.read()
+    if path.endswith(".json"):
+        snap = json.loads(text)
+        for section in ("counters", "gauges", "histograms"):
+            snap.setdefault(section, {})
+        return snap
+    return parse_exposition(text)
+
+
+def _base_name(series: str) -> str:
+    return series.split("{", 1)[0]
+
+
+def metric_names(snap: dict) -> set:
+    names = set()
+    for section in ("counters", "gauges", "histograms"):
+        for series in snap.get(section, {}):
+            names.add(_base_name(series))
+    return names
+
+
+def render_table(snap: dict) -> str:
+    lines = []
+    for section in ("counters", "gauges"):
+        series = snap.get(section, {})
+        if not series:
+            continue
+        lines.append(section.upper())
+        width = max(len(s) for s in series)
+        for name in sorted(series):
+            lines.append(f"  {name:<{width}}  {series[name]:g}")
+    hists = snap.get("histograms", {})
+    if hists:
+        lines.append("HISTOGRAMS")
+        width = max(len(s) for s in hists)
+        for name in sorted(hists):
+            h = hists[name]
+            parts = [f"count={h.get('count', 0):g}",
+                     f"sum={h.get('sum', 0):g}"]
+            for q in ("p50", "p95", "p99"):
+                if q in h:
+                    parts.append(f"{q}={h[q]:g}")
+            lines.append(f"  {name:<{width}}  " + " ".join(parts))
+    return "\n".join(lines) if lines else "(empty snapshot)"
+
+
+def render_diff(cur: dict, base: dict) -> str:
+    """Current vs. baseline: counter deltas, gauge moves, histogram
+    count/sum deltas; series only one side has are flagged."""
+    lines = []
+    for section in ("counters", "gauges"):
+        a, b = base.get(section, {}), cur.get(section, {})
+        names = sorted(set(a) | set(b))
+        if not names:
+            continue
+        lines.append(section.upper())
+        width = max(len(n) for n in names)
+        for name in names:
+            if name not in b:
+                lines.append(f"  {name:<{width}}  only in baseline "
+                             f"({a[name]:g})")
+            elif name not in a:
+                lines.append(f"  {name:<{width}}  new ({b[name]:g})")
+            elif section == "counters":
+                lines.append(f"  {name:<{width}}  {a[name]:g} -> {b[name]:g}"
+                             f"  ({b[name] - a[name]:+g})")
+            else:
+                lines.append(f"  {name:<{width}}  {a[name]:g} -> {b[name]:g}")
+    a, b = base.get("histograms", {}), cur.get("histograms", {})
+    names = sorted(set(a) | set(b))
+    if names:
+        lines.append("HISTOGRAMS")
+        width = max(len(n) for n in names)
+        for name in names:
+            if name not in b:
+                lines.append(f"  {name:<{width}}  only in baseline")
+            elif name not in a:
+                lines.append(f"  {name:<{width}}  new "
+                             f"(count={b[name].get('count', 0):g})")
+            else:
+                dc = b[name].get("count", 0) - a[name].get("count", 0)
+                ds = b[name].get("sum", 0) - a[name].get("sum", 0)
+                lines.append(f"  {name:<{width}}  count {dc:+g} sum {ds:+g}")
+    return "\n".join(lines) if lines else "(both snapshots empty)"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="metrics snapshot(s): .prom exposition or .json; "
+                         "one renders a table, two diff (current, baseline)")
+    ap.add_argument("--require", nargs="+", default=None, metavar="NAME",
+                    help="exit nonzero unless every NAME appears as a "
+                         "metric (label sets ignored)")
+    ap.add_argument("--chrome", default=None, metavar="TRACE_JSONL",
+                    help="convert a span JSONL to a Chrome trace_event "
+                         "file instead of reading metrics")
+    ap.add_argument("-o", "--out", default=None,
+                    help="output path for --chrome (default: stdout)")
+    args = ap.parse_args(argv)
+
+    if args.chrome:
+        if args.paths:
+            ap.error("--chrome takes no metrics paths")
+        payload = obs_trace.to_chrome(obs_trace.read_jsonl(args.chrome))
+        text = json.dumps(payload, indent=1) + "\n"
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(text)
+            print(f"{args.chrome}: {len(payload['traceEvents']) - 1} spans "
+                  f"-> {args.out}")
+        else:
+            sys.stdout.write(text)
+        return 0
+
+    if not args.paths or len(args.paths) > 2:
+        ap.error("expected one snapshot (table) or two (diff)")
+    try:
+        snaps = [load_snapshot(p) for p in args.paths]
+    except (OSError, ValueError) as e:
+        print(f"ERROR: {e}", file=sys.stderr)
+        return 1
+
+    if len(snaps) == 2:
+        print(render_diff(snaps[0], snaps[1]))
+    else:
+        print(render_table(snaps[0]))
+
+    if args.require:
+        names = metric_names(snaps[0])
+        missing = [n for n in args.require if n not in names]
+        for n in missing:
+            print(f"ERROR: required metric missing: {n}", file=sys.stderr)
+        if missing:
+            return 1
+        print(f"all {len(args.require)} required metrics present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
