@@ -23,6 +23,15 @@ ratio is recorded in ``paged_fused.note``.
     PYTHONPATH=src python -m benchmarks.serve_bench            # full
     PYTHONPATH=src python -m benchmarks.serve_bench --tiny     # CI smoke
 
+A second, fully deterministic shared-prefix workload (every request
+behind one 24-token system prompt, all greedy, open loop) runs the paged
+engine three more times — content-rng baseline, ``prefix_cache=True``,
+and prefix cache + speculative decoding — and records ``cache_hit_rate``
+and ``accepted_per_step``, the rate metrics ``tools/bench_compare.py``
+gates under its rate-floor class.  The hit accounting is asserted as
+arithmetic (late admissions adopt the whole prompt), and both features
+must reproduce the baseline's tokens bit-for-bit.
+
 The run asserts the paged engine's tokens/s beats fixed-slot on this
 workload — the acceptance bar for the continuous-batching refactor —
 and that greedy requests decode identical tokens on every engine.
@@ -110,6 +119,9 @@ _EXACT_COUNTERS = (
     "serve_requests_finished_total", "serve_tokens_generated_total",
     "serve_evictions_total", "serve_prefill_tokens_total",
     "serve_kv_blocks_allocated_total", "serve_kv_blocks_freed_total",
+    "serve_prefix_cache_hit_tokens_total",
+    "serve_prefix_cache_lookups_total", "serve_prefix_cache_cow_total",
+    "serve_spec_drafted_tokens_total", "serve_spec_accepted_tokens_total",
 )
 
 
@@ -221,6 +233,76 @@ def main(argv=None):
         f"{jax.default_backend()} "
         "(host runs execute Pallas in interpret mode)")
 
+    # --- Shared-prefix workload: prefix caching + speculative decoding ---
+    # Open loop (everyone submitted at t=0) and all-greedy, so admission
+    # order, adopted blocks, and every generated token are DETERMINISTIC:
+    # exactly the first `slots` requests prefill the shared system prompt,
+    # every later admission adopts it whole, and the hit-rate assertion
+    # below is arithmetic, not a tolerance.
+    shared_len = 3 * 8                       # 3 full blocks at block_size=8
+    n_pre = max(n_requests, args.slots * 2)
+    rng = np.random.default_rng(args.seed + 2)
+    sys_prompt = rng.integers(3, cfg.vocab, shared_len).tolist()
+    pre_specs = [dict(rid=rid,
+                      prompt=sys_prompt + rng.integers(
+                          3, cfg.vocab, int(rng.integers(2, 7))).tolist(),
+                      max_new_tokens=int(rng.integers(4, 9)),
+                      temperature=0.0)
+                 for rid in range(n_pre)]
+    zeros = [0.0] * n_pre
+    section(f"shared-prefix workload: {n_pre} greedy requests behind a "
+            f"{shared_len}-token system prompt")
+
+    def _prefix_engine(**kw):
+        return PagedServingEngine(params, cfg, PagedServeConfig(
+            slots=args.slots, max_len=max_len, seed=args.seed,
+            block_size=8, prefill_chunk=chunk, **kw))
+
+    base = _prefix_engine(rng_mode="content")
+    base_stats = drive(base, pre_specs, zeros)
+    base_by_rid = {r.rid: r.generated for r in base.finished}
+    base.close()
+
+    cached = _prefix_engine(prefix_cache=True)
+    cached_stats = drive(cached, pre_specs, zeros)
+    hit = int(cached.metrics.value("serve_prefix_cache_hit_tokens_total"))
+    pre = int(cached.metrics.value("serve_prefill_tokens_total"))
+    cached_stats["cache_hit_rate"] = round(hit / max(hit + pre, 1), 4)
+    cached_stats["telemetry"] = telemetry(cached)
+    assert hit == (n_pre - args.slots) * shared_len, (
+        f"deterministic hit accounting broke: {hit} adopted tokens, "
+        f"expected {(n_pre - args.slots) * shared_len}")
+    assert cached_stats["cache_hit_rate"] > 0
+    cached_by_rid = {r.rid: r.generated for r in cached.finished}
+    assert cached_by_rid == base_by_rid, (
+        "prefix caching changed generated tokens")
+    cached.close()
+    emit("paged_prefix.cache_hit_rate", cached_stats["cache_hit_rate"])
+    emit("paged_prefix.tokens_per_s", cached_stats["tokens_per_s"])
+
+    spec = _prefix_engine(prefix_cache=True, speculative=True, spec_k=4)
+    spec_stats = drive(spec, pre_specs, zeros)
+    s_hit = int(spec.metrics.value("serve_prefix_cache_hit_tokens_total"))
+    s_pre = int(spec.metrics.value("serve_prefill_tokens_total"))
+    spec_stats["cache_hit_rate"] = round(s_hit / max(s_hit + s_pre, 1), 4)
+    steps = spec.metrics.histogram("spec_accepted_tokens").count()
+    acc = int(spec.metrics.value("serve_spec_accepted_tokens_total") or 0)
+    drafted = int(spec.metrics.value("serve_spec_drafted_tokens_total") or 0)
+    spec_stats["accepted_per_step"] = round(acc / max(steps, 1), 4)
+    spec_stats["acceptance_rate"] = round(acc / max(drafted, 1), 4)
+    spec_stats["telemetry"] = telemetry(spec)
+    assert steps > 0 and acc > 0, "greedy traffic must take spec ticks"
+    spec_by_rid = {r.rid: r.generated for r in spec.finished}
+    assert spec_by_rid == base_by_rid, (
+        "speculative decoding changed generated tokens")
+    spec.close()
+    emit("paged_spec.accepted_per_step", spec_stats["accepted_per_step"])
+    emit("paged_spec.tokens_per_s", spec_stats["tokens_per_s"])
+
+    prefix_speedup = cached_stats["tokens_per_s"] / max(
+        base_stats["tokens_per_s"], 1e-9)
+    emit("prefix_vs_paged.speedup", round(prefix_speedup, 2))
+
     payload = {
         "tiny": bool(args.tiny),
         "workload": {
@@ -234,7 +316,11 @@ def main(argv=None):
         "fixed_slot": fixed_stats,
         "paged": paged_stats,
         "paged_fused": fused_stats,
+        "paged_prefix_base": base_stats,
+        "paged_prefix": cached_stats,
+        "paged_spec": spec_stats,
         "speedup_tokens_per_s": round(speedup, 3),
+        "prefix_speedup_tokens_per_s": round(prefix_speedup, 3),
     }
     write_json("BENCH_serve.json", payload)
 
@@ -262,6 +348,17 @@ def main(argv=None):
           f"{fixed_stats['tokens_per_s']} tok/s; paged p99 "
           f"{paged_stats['latency_p99_s']}s vs fixed "
           f"{fixed_stats['latency_p99_s']}s)")
+
+    # Prefix caching skips (n - slots) * shared_len prefill tokens on this
+    # workload, so it must not LOSE throughput to the plain paged engine;
+    # tiny runs only backstop wall-clock noise on shared runners.
+    assert prefix_speedup > floor, (
+        f"prefix caching must not regress paged tokens/s on a shared-"
+        f"prefix workload (floor {floor}x), got {prefix_speedup:.2f}x")
+    print(f"prefix cache: hit rate {cached_stats['cache_hit_rate']}, "
+          f"{prefix_speedup:.2f}x paged tokens/s; speculative "
+          f"accepted/step {spec_stats['accepted_per_step']} "
+          f"(acceptance {spec_stats['acceptance_rate']})")
     return payload
 
 

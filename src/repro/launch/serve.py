@@ -63,6 +63,25 @@ def main(argv=None):
                     help="run the fused paged-attention Pallas kernel "
                          "instead of gather+chunk_decode_attention "
                          "(--paged; see docs/kernels.md)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="block-level prefix caching: requests sharing a "
+                         "prompt prefix adopt cached KV blocks instead of "
+                         "re-prefilling (--paged; forces content-chain "
+                         "rng — see docs/prefix_caching.md)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="draft/verify speculative decoding on greedy "
+                         "rows: draft with the paired cheap backend, "
+                         "verify in one multi-token pass (--paged)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative step "
+                         "(--speculative)")
+    ap.add_argument("--draft-backend", default="",
+                    help="draft backend name (--speculative; default: "
+                         "the registry pairing for the arch's sc_backend)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                         "request (exercises the prefix cache; 0 = fully "
+                         "random prompts)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the run's metrics after drain: Prometheus "
                          "text exposition, or the JSON snapshot when PATH "
@@ -79,6 +98,10 @@ def main(argv=None):
     if args.fused_attention and not args.paged:
         raise SystemExit("--fused-attention needs --paged (it is the "
                          "paged decode path's kernel)")
+    if (args.prefix_cache or args.speculative) and not args.paged:
+        raise SystemExit("--prefix-cache/--speculative need --paged (they "
+                         "are paged-engine features; see "
+                         "docs/prefix_caching.md)")
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
@@ -108,21 +131,32 @@ def main(argv=None):
         engine = PagedServingEngine(params, cfg, PagedServeConfig(
             slots=args.slots, max_len=args.max_len, seed=args.seed,
             block_size=args.block_size, num_blocks=args.max_blocks,
-            prefill_chunk=args.prefill_chunk),
+            prefill_chunk=args.prefill_chunk,
+            prefix_cache=args.prefix_cache, speculative=args.speculative,
+            spec_k=args.spec_k, draft_backend=args.draft_backend),
             metrics=metrics, tracer=tracer)
         print(f"paged engine: block_size={args.block_size} "
               f"pool={engine.kv.cfg.num_blocks} blocks "
-              f"(chunked prefill {args.prefill_chunk})")
+              f"(chunked prefill {args.prefill_chunk}"
+              + (", prefix cache" if args.prefix_cache else "")
+              + (f", speculative k={args.spec_k}" if args.speculative
+                 else "") + ")")
     else:
         engine = ServingEngine(params, cfg, ServeConfig(
             slots=args.slots, max_len=args.max_len, seed=args.seed),
             mesh=mesh, shard_rules=rules, metrics=metrics, tracer=tracer)
 
     rng = jax.random.PRNGKey(args.seed + 1)
+    shared = []
+    if args.shared_prefix:
+        rng, k = jax.random.split(rng)
+        shared = jax.random.randint(
+            k, (args.shared_prefix,), 3, cfg.vocab).tolist()
     for rid in range(args.requests):
         rng, k = jax.random.split(rng)
         plen = int(jax.random.randint(k, (), 4, 17))
-        prompt = jax.random.randint(k, (plen,), 3, cfg.vocab).tolist()
+        prompt = shared + jax.random.randint(
+            k, (plen,), 3, cfg.vocab).tolist()
         engine.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=args.max_new,
                               temperature=args.temperature))
@@ -140,6 +174,20 @@ def main(argv=None):
         if lat:
             print(f"  decode p50={lat['decode_p50_ms']:.2f} "
                   f"p95={lat['decode_p95_ms']:.2f} ms/token")
+        if args.prefix_cache:
+            hit = engine.metrics.value(
+                "serve_prefix_cache_hit_tokens_total") or 0
+            pre = engine.metrics.value("serve_prefill_tokens_total") or 0
+            rate = hit / max(hit + pre, 1)
+            print(f"  prefix cache: {int(hit)} tokens adopted "
+                  f"(hit rate {rate:.2f})")
+        if args.speculative:
+            drafted = engine.metrics.value(
+                "serve_spec_drafted_tokens_total") or 0
+            acc = engine.metrics.value(
+                "serve_spec_accepted_tokens_total") or 0
+            print(f"  speculative: {int(acc)}/{int(drafted)} drafted "
+                  "tokens accepted")
     for r in finished[:4]:
         print(f"  req {r.rid}: prompt[:6]={r.prompt[:6]} "
               f"generated={r.generated}")

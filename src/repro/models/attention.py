@@ -276,8 +276,11 @@ def paged_scatter(pages, block_table, new, lengths, n_valid):
     ``lengths[r] + i`` when ``i < n_valid[r]``; tokens beyond a row's
     valid count (chunk padding, idle rows) land in the reserved null
     block 0, which no live sequence ever maps.  Rows' block tables point
-    at disjoint pool blocks (the allocator's invariant), so scatters
-    never collide except harmlessly inside the null block.
+    at disjoint pool blocks over the written span (the allocator hands
+    each row its own blocks, and prefix-shared blocks are copied out by
+    the scheduler's copy-on-write barrier before any write reaches them
+    — ``kv_cache.PagedKVCache.make_writable``), so scatters never collide
+    except harmlessly inside the null block.
     """
     bs = pages.shape[1]
     b, sc = new.shape[:2]
@@ -290,6 +293,26 @@ def paged_scatter(pages, block_table, new, lengths, n_valid):
     off = jnp.where(valid, t % bs, 0)
     flat = new.reshape(b * sc, *new.shape[2:]).astype(pages.dtype)
     return pages.at[page.reshape(-1), off.reshape(-1)].set(flat)
+
+
+def paged_copy_blocks(pages, src, dst):
+    """Copy whole pool blocks ``src[i] -> dst[i]`` on every layer.
+
+    The device half of copy-on-write: when the scheduler's write barrier
+    (``kv_cache.PagedKVCache.make_writable``) replaces a shared or
+    hash-registered block in a sequence's table, the new block must carry
+    the old block's K/V before the next scatter overwrites its tail.
+    pages: the ``{"k", "v"}`` pool dict of (layers, P, bs, kv, d) arrays;
+    src/dst: equal-length block-id vectors.  Pure indexed-copy — one
+    executable per distinct copy count (COW is rare and counts are tiny).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(pool):
+        return pool.at[:, dst].set(pool[:, src])
+
+    return {"k": cp(pages["k"]), "v": cp(pages["v"])}
 
 
 def paged_attention_block(

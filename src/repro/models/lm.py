@@ -284,7 +284,7 @@ def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
 
 
 def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
-                 *, rng=None):
+                 *, rng=None, all_logits: bool = False):
     """One chunked step over the paged KV cache — decode AND prefill.
 
     tokens: (b, sc) — row r feeds its next ``n_valid[r]`` context tokens
@@ -294,7 +294,10 @@ def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
     null block and are masked out of every live query.  Returns
     ``(logits, new_pages)`` with logits (b, vocab) taken at each row's
     LAST VALID position — the next-token distribution once the row's
-    pending context is consumed.
+    pending context is consumed.  With ``all_logits=True`` (a static
+    flag — bake it into the jitted partial) logits are (b, sc, vocab),
+    one next-token distribution per fed position: the speculative
+    verifier reads every drafted position from ONE call.
 
     RNG contract (what makes continuous batching testable): ``rng`` is a
     (b, 2) array of per-request raw keys.  Inside, every token folds its
@@ -306,6 +309,14 @@ def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
     batch, or re-prefilled after an eviction.  ``paged_attn="fused_sc"``
     rides the same contract (attention QK^T draws under salt 29), which
     is why it REQUIRES ``rng``.
+
+    Alternatively ``rng`` may be (b, sc, 2) PER-TOKEN keys, already
+    resolved by the caller — the scheduler's content-chain mode
+    (``rng_mode="content"``, forced by prefix caching) derives token t's
+    key from the token CONTENT up to t instead of the request identity,
+    so two requests sharing a prompt prefix draw bitwise-identical SC
+    bits there and cached KV blocks are safe to share.  Layer/call-site
+    folds are identical in both forms.
     """
     if cfg.family in ("ssm", "hybrid"):
         raise ValueError("decode_paged supports attention-family configs "
@@ -319,8 +330,12 @@ def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
     positions = lengths[:, None] + jnp.arange(sc)[None, :]      # (b, sc)
     keys = None
     if rng is not None:
-        per_tok = jnp.broadcast_to(rng[:, None, :], (b, sc, rng.shape[-1]))
-        keys = layers.fold_keys(per_tok, positions)             # (b, sc, 2)
+        if rng.ndim == 3:
+            keys = rng                  # (b, sc, 2) caller-resolved keys
+        else:
+            per_tok = jnp.broadcast_to(rng[:, None, :],
+                                       (b, sc, rng.shape[-1]))
+            keys = layers.fold_keys(per_tok, positions)         # (b, sc, 2)
 
     def body(carry, scanned):
         xc, idx = carry
@@ -343,6 +358,8 @@ def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
     (x, _), (k_new, v_new) = jax.lax.scan(
         body, (x, 0), (params["blocks"], pages["k"], pages["v"]))
     x = layers.rms_norm(x, params["final_norm"])
+    if all_logits:
+        return _logits(x, params, cfg), {"k": k_new, "v": v_new}
     last = jnp.maximum(n_valid - 1, 0)
     xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
     logits = _logits(xl, params, cfg)

@@ -34,6 +34,9 @@ Public API (see ``docs/backends.md`` for the selection guide):
   :func:`~repro.sc.registry.get_backend` /
   :func:`~repro.sc.registry.available_backends` /
   :func:`~repro.sc.registry.fast_backend` — the registry hooks.
+* :func:`~repro.sc.registry.draft_backend` /
+  :func:`~repro.sc.registry.register_draft_pair` — the speculative
+  draft/verify pairing (cheap guesser per verify-grade backend).
 * :func:`~repro.sc.sharded.sc_dot_sharded` /
   :func:`~repro.sc.sharded.use_mesh` /
   :class:`~repro.sc.sharded.ScShardRules` — the mesh-sharded path.
@@ -41,8 +44,9 @@ Public API (see ``docs/backends.md`` for the selection guide):
 
 from repro.sc.config import ScConfig                      # noqa: F401
 from repro.sc.registry import (                           # noqa: F401
-    available_backends, fast_backend, get_backend, register_backend,
-    register_rows_backend, sc_dot, sc_dot_rows)
+    available_backends, draft_backend, fast_backend, get_backend,
+    register_backend, register_draft_pair, register_rows_backend, sc_dot,
+    sc_dot_rows)
 from repro.sc import autotune                             # noqa: F401
 from repro.sc import backends as _backends                # noqa: F401  (registers)
 from repro.sc import ctr_rng                              # noqa: F401

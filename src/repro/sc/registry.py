@@ -48,6 +48,17 @@ _ROW_BACKENDS: dict = {}
 # valid when the two backends provably produce the same bits per key.
 _FAST_ALIASES: dict = {"pallas_bitexact": "pallas_fused"}
 
+# verify backend -> cheap DRAFT backend for speculative decoding.  The
+# draft only has to GUESS tokens (the verifier re-derives every emitted
+# token under its own backend, so draft quality moves throughput, never
+# outputs); the registry pairs each verify-grade backend with the
+# cheapest stand-in that tracks it: stochastic backends draft with
+# ``moment`` (the closed-form mean of the SC estimator — no bitstreams,
+# one dense matmul of work) and ``exact`` drafts as itself (nothing is
+# cheaper, and its guesses are then always right).
+_DRAFT_PAIRS: dict = {"exact": "exact"}
+_DEFAULT_DRAFT = "moment"
+
 
 def register_backend(name: str):
     """Decorator: register an SC matmul backend under ``name``.
@@ -117,6 +128,28 @@ def fast_backend(name: str, nbit: int | None = None) -> str:
     if nbit is not None and nbit % 32 != 0:
         return name
     return fast
+
+
+def register_draft_pair(verify: str, draft: str) -> None:
+    """Pair ``verify`` with the draft backend speculative decoding should
+    guess with.  Both names must already be registered/resolvable; the
+    pairing itself carries no bit-identity obligation (accepted tokens
+    are always the VERIFIER's greedy tokens)."""
+    get_backend(draft)          # fail fast on unknown names
+    _DRAFT_PAIRS[verify] = draft
+
+
+def draft_backend(name: str) -> str:
+    """Draft backend paired with verify backend ``name``.
+
+    Upgrades applied by ``fast_backend`` don't change the pairing
+    (``pallas_bitexact`` and ``pallas_fused`` draft identically);
+    unpaired stochastic backends fall back to ``moment`` — the
+    closed-form expectation of the SC estimator, one dense matmul per
+    dispatch and deterministically close to every unbiased backend's
+    mean, which is what makes its greedy guesses land.
+    """
+    return _DRAFT_PAIRS.get(name, _DEFAULT_DRAFT)
 
 
 def _dispatch_scope(entry: str, backend: str, m: int, k: int, n: int):

@@ -57,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.models import lm
+from repro.models import attention, lm
 
 
 @dataclasses.dataclass
@@ -92,6 +92,23 @@ class PagedServeConfig:
     smaller pools trade memory for eviction pressure.  ``prefill_chunk``
     caps how many prompt tokens one tick feeds per row (chunked prefill:
     long prompts admit over several ticks instead of stalling the batch).
+
+    ``prefix_cache=True`` turns on block-level prefix caching
+    (``serve/kv_cache.py``): requests sharing a prompt prefix adopt each
+    other's full KV blocks instead of re-prefilling them.  It forces
+    ``rng_mode="content"`` — SC keys for context tokens derive from token
+    CONTENT, not request identity, so shared blocks hold bitwise-valid
+    KV for every adopter even on stochastic backends.  ``rng_mode`` can
+    also be set to ``"content"`` standalone (e.g. to compare cache
+    on/off outputs bit-for-bit).
+
+    ``speculative=True`` drafts ``spec_k`` tokens per greedy decode row
+    with the cheap paired backend (``draft_backend``, default the
+    registry pairing ``sc.draft_backend(cfg.sc_backend)`` — ``moment``
+    for stochastic backends) and verifies them in ONE width-(k+1)
+    ``decode_paged`` call on the real backend.  Every emitted token is
+    the VERIFIER's greedy token, so outputs are token-identical to
+    non-speculative decoding; acceptance only moves throughput.
     """
 
     slots: int = 4
@@ -101,6 +118,11 @@ class PagedServeConfig:
     block_size: int = 16
     num_blocks: int = 0
     prefill_chunk: int = 8
+    prefix_cache: bool = False
+    rng_mode: str = "request"       # "request" | "content"
+    speculative: bool = False
+    spec_k: int = 4
+    draft_backend: str = ""         # "" = registry pairing for cfg.sc_backend
 
 
 class _ArchTracedEngine:
@@ -420,6 +442,10 @@ class PagedServingEngine(_ArchTracedEngine):
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
+        if scfg.rng_mode not in ("request", "content"):
+            raise ValueError(
+                f"rng_mode must be 'request' or 'content', got "
+                f"{scfg.rng_mode!r}")
         self._init_obs(metrics, tracer)
         num_blocks = scfg.num_blocks or kvc.default_num_blocks(
             scfg.slots, scfg.max_len, scfg.block_size)
@@ -431,7 +457,8 @@ class PagedServingEngine(_ArchTracedEngine):
                 f"num_blocks={num_blocks} cannot hold even one max_len="
                 f"{scfg.max_len} sequence (+1 null block) at block_size="
                 f"{scfg.block_size}; need >= {1 + pcfg.blocks_per_seq}")
-        self.kv = kvc.PagedKVCache(pcfg, metrics=self.metrics)
+        self.kv = kvc.PagedKVCache(pcfg, metrics=self.metrics,
+                                   enable_prefix_cache=scfg.prefix_cache)
         self.pages = lm.init_paged_cache(cfg, num_blocks, scfg.block_size)
         self.scheduler = sched.Scheduler(
             scfg, self.kv, base_key=jax.random.PRNGKey(scfg.seed),
@@ -444,6 +471,39 @@ class PagedServingEngine(_ArchTracedEngine):
             or getattr(cfg, "paged_attn", "unfused") == "fused_sc")
         self._step_fn = jax.jit(partial(lm.decode_paged, cfg=cfg))
         self._sample_fn = jax.jit(_sample_rows)
+        self._copy_fn = jax.jit(attention.paged_copy_blocks)
+        if scfg.speculative:
+            from repro import sc
+            if scfg.spec_k < 1:
+                raise ValueError(
+                    f"speculative=True needs spec_k >= 1, got {scfg.spec_k}")
+            dname = scfg.draft_backend or sc.draft_backend(cfg.sc_backend)
+            sc.get_backend(dname)           # fail fast on unknown names
+            # The draft runs the SAME weights on the cheap backend with
+            # plain unfused attention: its K/V writes are placeholders the
+            # verify pass overwrites, its logits only GUESS tokens.
+            dcfg = cfg.replace(sc_backend=dname, paged_attn="unfused")
+            self._draft_fn = jax.jit(partial(lm.decode_paged, cfg=dcfg))
+            # The verifier is the real model at width spec_k+1 returning
+            # logits at EVERY fed position (all_logits) — one pass scores
+            # the whole drafted run under the exact same per-position key
+            # grid as non-speculative decoding, which is what makes its
+            # greedy tokens bitwise the non-speculative tokens.
+            self._verify_fn = jax.jit(
+                partial(lm.decode_paged, cfg=cfg, all_logits=True))
+            self._spec_hist = self.metrics.histogram(
+                "spec_accepted_tokens",
+                "draft tokens accepted per speculative row-tick (0..k)",
+                buckets=tuple(float(i) for i in range(scfg.spec_k + 1)))
+            self._m_spec_drafted = self.metrics.counter(
+                "serve_spec_drafted_tokens_total",
+                "tokens drafted by the cheap backend")
+            self._m_spec_accepted = self.metrics.counter(
+                "serve_spec_accepted_tokens_total",
+                "drafted tokens the verifier accepted")
+            # host-side replay log: one entry per speculative row-tick —
+            # the counter-arithmetic tests re-derive the counters from it
+            self.spec_log: list[dict] = []
         self.ticks = 0
         self._seen_decode_tick = False
         # Per-tick decode wall times (ms per live token, width-1 ticks
@@ -498,12 +558,24 @@ class PagedServingEngine(_ArchTracedEngine):
                 raise RuntimeError(
                     "scheduler produced a no-progress tick (every row "
                     "deferred) — the block pool is mis-sized")
-            kind = "decode" if plan.sc == 1 else "prefill"
+            if plan.copies:
+                # copy-on-write: a write this tick lands in a block that
+                # was shared/registered — carry its K/V to the fresh block
+                # before any scatter touches it
+                src = [s for s, _ in plan.copies]
+                dst = [d for _, d in plan.copies]
+                self.pages = self._copy_fn(self.pages, src, dst)
+            spec = bool(plan.spec_rows)
+            kind = ("spec" if spec
+                    else "decode" if plan.sc == 1 else "prefill")
             live = sum(1 for nv in plan.n_valid if nv)
             self._m_ticks.inc(kind=kind)
             with self.tracer.span("engine.tick", tick=self.ticks,
                                   kind=kind, live=live, width=plan.sc):
-                self._run_plan(plan, live)
+                if spec:
+                    self._run_spec_plan(plan)
+                else:
+                    self._run_plan(plan, live)
             self.ticks += 1
             return True
 
@@ -542,6 +614,119 @@ class PagedServingEngine(_ArchTracedEngine):
             toks = np.asarray(self._sample_fn(
                 jnp.stack(keys), logits,
                 jnp.asarray(temps, jnp.float32))).tolist()   # one sync
+            for slot, seq in plan.sample_rows:
+                self.scheduler.on_token(slot, seq, toks[slot])
+
+    def _run_spec_plan(self, plan):
+        """One speculative tick: ``spec_k`` cheap draft steps, then ONE
+        real verify pass, then commit the accepted run per row.
+
+        The draft loop runs the SAME weights through the paired cheap
+        backend on a scratch copy of the page pool (``dpages``): each
+        width-1 step feeds the previous token at the next position, takes
+        the greedy argmax as the draft, and accumulates its own K/V so
+        later draft steps can attend to earlier draft tokens.  The
+        scratch pool is DROPPED afterwards — ``self.pages`` never holds
+        draft-grade K/V.
+
+        The verify pass is the real model at width ``spec_k + 1`` feeding
+        ``[t_F, d_1 .. d_k]`` against the pristine pool: ``paged_scatter``
+        writes each position's verify-grade K/V before attention reads
+        it, so one call both scores every drafted position
+        (``all_logits``) and leaves the cache exactly as ``a + 1``
+        non-speculative decode ticks would have (positions beyond the
+        accepted run hold stale K/V that is length-masked and overwritten
+        on the next feed — same contract as chunk padding).  Its rng is
+        the SAME per-position key grid as non-speculative decoding, so
+        the verifier's greedy tokens are bitwise the non-speculative
+        tokens: acceptance moves throughput, never outputs.
+
+        Rows not speculating this tick (temperature > 0, still
+        prefilling, or no pool headroom) ride the verify pass with their
+        single token (``n_valid`` from the plan) and sample from its
+        position-0 logits — a mixed batch costs no extra dispatch.
+        """
+        k = self.scheduler.spec_k
+        b = len(plan.tokens)
+        lengths = jnp.asarray(plan.lengths, jnp.int32)
+        tables = jnp.asarray(plan.tables, jnp.int32)
+        spec_slots = {slot for slot, _ in plan.spec_rows}
+        content = self.scheduler.content_mode
+        stoch = self._stochastic_substrate
+        dummy = self.scheduler._dummy_key
+        base_rng = None
+        if stoch and not content:
+            base_rng = jnp.stack(plan.keys)            # (b, 2) request keys
+        chain = None
+        vkeys = None
+        if stoch and content:
+            chain = [plan.keys[r][0] for r in range(b)]  # (2,) per row
+            vkeys = [[chain[r]] for r in range(b)]
+        draft_nv = jnp.asarray(
+            [1 if r in spec_slots else 0 for r in range(b)], jnp.int32)
+        cur = [int(plan.tokens[r][0]) for r in range(b)]
+        drafts: list[list[int]] = [[] for _ in range(b)]
+        dpages = self.pages
+        for i in range(k):
+            toks = jnp.asarray([[c] for c in cur], jnp.int32)
+            if not stoch:
+                rng = None
+            elif content:
+                rng = jnp.stack(chain)[:, None, :]     # (b, 1, 2)
+            else:
+                rng = base_rng
+            dlogits, dpages = self._draft_fn(
+                self.params, dpages, tables, toks, lengths + i, draft_nv,
+                rng=rng)
+            nxt = np.asarray(jnp.argmax(dlogits, axis=-1)).tolist()  # sync
+            for r in range(b):
+                if r in spec_slots:
+                    drafts[r].append(int(nxt[r]))
+                    cur[r] = int(nxt[r])
+                    if chain is not None:
+                        chain[r] = jax.random.fold_in(chain[r], int(nxt[r]))
+                if vkeys is not None:
+                    vkeys[r].append(chain[r] if r in spec_slots else dummy)
+        vtok, vnv = [], []
+        for r in range(b):
+            if r in spec_slots:
+                vtok.append([int(plan.tokens[r][0])] + drafts[r])
+                vnv.append(k + 1)
+            else:
+                vtok.append([int(plan.tokens[r][0])] + [0] * k)
+                vnv.append(plan.n_valid[r])
+        if not stoch:
+            rng = None
+        elif content:
+            rng = jnp.stack([jnp.stack(vkeys[r]) for r in range(b)])
+        else:
+            rng = base_rng
+        vlogits, self.pages = self._verify_fn(
+            self.params, self.pages, tables, jnp.asarray(vtok, jnp.int32),
+            lengths, jnp.asarray(vnv, jnp.int32), rng=rng)
+        greedy = np.asarray(jnp.argmax(vlogits, axis=-1))   # (b, k+1), sync
+        for slot, seq in plan.spec_rows:
+            vrow = [int(t) for t in greedy[slot]]
+            a = 0
+            while a < k and drafts[slot][a] == vrow[a]:
+                a += 1
+            committed = self.scheduler.on_tokens(slot, seq, vrow[:a + 1])
+            self._spec_hist.observe(float(a))
+            self._m_spec_drafted.inc(k)
+            self._m_spec_accepted.inc(a)
+            self.spec_log.append(dict(
+                tick=self.ticks, rid=seq.req.rid, k=k,
+                drafted=list(drafts[slot]), verified=vrow,
+                accepted=a, committed=committed))
+        if plan.sample_rows:
+            keys = [self._dummy_sample_key()] * b
+            temps = [0.0] * b
+            for slot, seq in plan.sample_rows:
+                keys[slot] = self.scheduler.sample_key(seq)
+                temps[slot] = seq.req.temperature
+            toks = np.asarray(self._sample_fn(
+                jnp.stack(keys), vlogits[:, 0],
+                jnp.asarray(temps, jnp.float32))).tolist()
             for slot, seq in plan.sample_rows:
                 self.scheduler.on_token(slot, seq, toks[slot])
 

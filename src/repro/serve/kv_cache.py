@@ -1,5 +1,5 @@
 """Block-pool paged KV cache: fixed-size token blocks + per-sequence
-block tables + a freelist allocator.
+block tables + a freelist allocator + block-level prefix caching.
 
 The paper's throughput argument is utilization — every MRAM cell an
 independent MUL engine only pays off if the system above keeps the arrays
@@ -17,6 +17,28 @@ Block 0 is reserved as the NULL block: chunk padding and idle batch rows
 scatter their K/V there (see ``models/attention.py:paged_scatter``), so no
 live sequence ever maps it and the allocator never hands it out.
 
+Prefix caching (``enable_prefix_cache=True``) layers vLLM-style sharing
+on top of the same pool.  Every FULL block a sequence fills is content-
+addressed by a chain hash over its token prefix (``_chain_hash``: hash of
+the parent block's hash plus this block's tokens, so equal hashes mean
+equal token prefixes from position 0).  Blocks are refcounted: a block
+referenced by k live block tables has refcount k, and ``release`` decrefs
+instead of freeing — a block another sequence still maps NEVER returns to
+the freelist (the PR-4 LIFO eviction assumed sole ownership; that latent
+bug is fixed here and pinned by tests).  A block whose refcount drops to
+zero but whose hash is registered parks on an LRU list of cached blocks
+instead of the freelist; allocation takes freelist blocks first and then
+evicts the least-recently-used cached block (unregistering its hash).
+The pool therefore partitions at all times into
+
+    freelist ∪ cached (ref 0, hash-registered) ∪ referenced (ref >= 1)
+
+— the invariant the property suite (tests/test_prefix_cache.py) drives
+random interleavings against.  Shared or registered blocks are IMMUTABLE:
+any write into a block that is shared (ref > 1) or hash-registered goes
+through :meth:`make_writable`, which copies it out (copy-on-write) and
+hands the engine the device-side copy ops.
+
 The device-side pool tensors live in ``models/lm.py:init_paged_cache``;
 this module is the host-side bookkeeping (pure Python, O(1) per alloc).
 """
@@ -24,7 +46,9 @@ this module is the host-side bookkeeping (pure Python, O(1) per alloc).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
+from collections import OrderedDict
 
 
 NULL_BLOCK = 0
@@ -65,6 +89,22 @@ class PagedCacheConfig:
 def blocks_for(tokens: int, block_size: int) -> int:
     """How many blocks a sequence of ``tokens`` tokens occupies."""
     return -(-tokens // block_size)
+
+
+def _chain_hash(parent: str | None, block_tokens) -> str:
+    """Content address of one FULL block: hash of (parent hash, tokens).
+
+    Chaining makes the hash a function of the ENTIRE token prefix up to
+    and including this block, so two sequences share a block exactly when
+    their prompts agree on every position the block covers — the property
+    that makes a hit safe to splice into a different request's table.
+    """
+    h = hashlib.sha1()
+    if parent is not None:
+        h.update(parent.encode())
+    h.update(b"|")
+    h.update(",".join(str(int(t)) for t in block_tokens).encode())
+    return h.hexdigest()
 
 
 class BlockPool:
@@ -108,13 +148,28 @@ class PagedKVCache:
     the block-pool series: ``serve_kv_blocks_allocated_total`` /
     ``serve_kv_blocks_freed_total`` counters plus ``serve_kv_blocks_free``
     and ``serve_kv_block_occupancy`` gauges — the pool-pressure signals
-    the eviction policy and ROADMAP item 1's prefix cache are judged by.
+    the eviction policy and the prefix cache are judged by.  With
+    ``enable_prefix_cache=True`` the prefix-sharing series record too:
+    ``serve_prefix_cache_hit_tokens_total``, ``_lookups_total``,
+    ``_evictions_total``, ``_cow_total`` and the ``serve_kv_cached_blocks``
+    gauge.
     """
 
-    def __init__(self, cfg: PagedCacheConfig, metrics=None):
+    def __init__(self, cfg: PagedCacheConfig, metrics=None,
+                 enable_prefix_cache: bool = False):
         self.cfg = cfg
         self.pool = BlockPool(cfg.num_blocks)
         self.tables: dict[int, list[int]] = {}      # seq id -> block ids
+        self.prefix_cache = enable_prefix_cache
+        # ---- refcount + content-address state (always maintained; only
+        # adopt_prefix creates sharing, so with the cache off every ref
+        # is 1 and behavior is exactly the PR-4 allocator) ----
+        self.refcounts: dict[int, int] = {}         # block id -> ref
+        self.block_hash: dict[int, str] = {}        # block id -> chain hash
+        self.hash_to_block: dict[str, int] = {}     # chain hash -> block id
+        # ref-0 blocks holding reusable content, oldest first (LRU order)
+        self.cached: OrderedDict[int, str] = OrderedDict()
+        self._chains: dict[int, list[str]] = {}     # seq id -> block hashes
         self._m_alloc = self._m_freed = None
         if metrics is not None:
             self._m_alloc = metrics.counter(
@@ -128,23 +183,85 @@ class PagedKVCache:
             self._g_occ = metrics.gauge(
                 "serve_kv_block_occupancy",
                 "fraction of allocatable KV blocks mapped by sequences")
+            self._m_hit_tok = metrics.counter(
+                "serve_prefix_cache_hit_tokens_total",
+                "context tokens served from cached prefix blocks")
+            self._m_lookups = metrics.counter(
+                "serve_prefix_cache_lookups_total",
+                "prefix-cache lookups at admission")
+            self._m_pc_evict = metrics.counter(
+                "serve_prefix_cache_evictions_total",
+                "cached blocks evicted from the LRU list to satisfy allocs")
+            self._m_cow = metrics.counter(
+                "serve_prefix_cache_cow_total",
+                "copy-on-write block copies (write into a shared or "
+                "registered block)")
+            self._g_cached = metrics.gauge(
+                "serve_kv_cached_blocks",
+                "ref-0 blocks parked on the prefix-cache LRU list")
             self._update_gauges()
 
     def _update_gauges(self) -> None:
         if self._m_alloc is not None:
             self._g_free.set(self.pool.free_blocks)
             self._g_occ.set(round(self.utilization(), 6))
+            self._g_cached.set(len(self.cached))
 
     # ------------------------------------------------------------------
+    # Allocation: freelist first, then LRU eviction of cached blocks
+    # ------------------------------------------------------------------
+    @property
+    def allocatable_blocks(self) -> int:
+        """Blocks an alloc can obtain: free plus cached-but-unreferenced
+        (the LRU list is evictable on demand)."""
+        return self.pool.free_blocks + len(self.cached)
+
     @property
     def free_tokens(self) -> int:
-        return self.pool.free_blocks * self.cfg.block_size
+        return self.allocatable_blocks * self.cfg.block_size
 
+    def _unregister(self, bid: int) -> None:
+        h = self.block_hash.pop(bid, None)
+        if h is not None and self.hash_to_block.get(h) == bid:
+            del self.hash_to_block[h]
+
+    def _alloc(self, n: int) -> list[int] | None:
+        """All-or-nothing alloc of ``n`` blocks, evicting LRU cached
+        blocks (unregistering their hashes) when the freelist runs dry."""
+        if n > self.allocatable_blocks:
+            return None
+        while self.pool.free_blocks < n:
+            bid, _h = self.cached.popitem(last=False)      # oldest first
+            self._unregister(bid)
+            self.pool.free([bid])
+            if self._m_alloc is not None:
+                self._m_pc_evict.inc()
+        got = self.pool.alloc(n)
+        assert got is not None
+        for b in got:
+            self.refcounts[b] = 1
+        return got
+
+    def _decref(self, bid: int) -> None:
+        self.refcounts[bid] -= 1
+        if self.refcounts[bid] > 0:
+            return
+        del self.refcounts[bid]
+        h = self.block_hash.get(bid)
+        if h is not None and self.hash_to_block.get(h) == bid:
+            # Reusable content: park on the LRU list, most recent last.
+            self.cached[bid] = h
+            self.cached.move_to_end(bid)
+        else:
+            self.block_hash.pop(bid, None)
+            self.pool.free([bid])
+
+    # ------------------------------------------------------------------
     def has_room(self, seq_id: int, upto_tokens: int) -> bool:
         have = len(self.tables.get(seq_id, []))
         need = blocks_for(min(upto_tokens, self.cfg.max_len),
                           self.cfg.block_size) - have
-        return need <= self.pool.free_blocks
+        return need <= self.allocatable_blocks
 
     def ensure(self, seq_id: int, upto_tokens: int) -> bool:
         """Grow ``seq_id``'s table to cover ``upto_tokens`` positions.
@@ -161,7 +278,7 @@ class PagedKVCache:
         need = blocks_for(upto_tokens, self.cfg.block_size) - len(table)
         if need <= 0:
             return True
-        got = self.pool.alloc(need)
+        got = self._alloc(need)
         if got is None:
             return False
         table.extend(got)
@@ -171,9 +288,15 @@ class PagedKVCache:
         return True
 
     def release(self, seq_id: int) -> int:
-        """Free every block of ``seq_id``; returns how many were freed."""
+        """Drop every block reference of ``seq_id``; returns how many
+        references were dropped.  REFCOUNT-AWARE: a block another live
+        sequence still maps stays allocated (the PR-4 LIFO eviction freed
+        victims' blocks unconditionally, which would corrupt a
+        prefix-sharing neighbour — see tests/test_prefix_cache.py)."""
         table = self.tables.pop(seq_id, [])
-        self.pool.free(table)
+        self._chains.pop(seq_id, None)
+        for b in table:
+            self._decref(b)
         if self._m_freed is not None and table:
             self._m_freed.inc(len(table))
             self._update_gauges()
@@ -197,6 +320,169 @@ class PagedKVCache:
         """Fraction of allocatable blocks currently mapped by sequences."""
         total = self.cfg.num_blocks - 1
         return self.live_blocks / total if total else 0.0
+
+    # ------------------------------------------------------------------
+    # Prefix cache: chain-hash lookup, hit adoption, registration, COW
+    # ------------------------------------------------------------------
+    def adopt_prefix(self, seq_id: int, tokens) -> int:
+        """Splice the longest cached block chain matching ``tokens`` into
+        a FRESH table for ``seq_id``; returns how many context tokens the
+        hit covers (0 with the cache off or on a miss).
+
+        Walks the chain hash block by block and increfs every hit.  The
+        hit is capped at ``len(tokens) - 1`` so at least one token is
+        left to feed (the engine needs its logits to sample) — when the
+        whole prompt is cached, the final block is still adopted and the
+        last token re-fed through :meth:`make_writable`'s copy-on-write,
+        never written in place.
+        """
+        if not self.prefix_cache or self.tables.get(seq_id):
+            return 0
+        if self._m_alloc is not None:
+            self._m_lookups.inc()
+        bs = self.cfg.block_size
+        hits: list[int] = []
+        chain: list[str] = []
+        parent = None
+        for b0 in range(0, (len(tokens) // bs) * bs, bs):
+            h = _chain_hash(parent, tokens[b0:b0 + bs])
+            bid = self.hash_to_block.get(h)
+            if bid is None:
+                break
+            hits.append(bid)
+            chain.append(h)
+            parent = h
+        if not hits:
+            return 0
+        cached_tokens = min(len(hits) * bs, len(tokens) - 1)
+        n_blocks = blocks_for(cached_tokens, bs)
+        for bid in hits[:n_blocks]:
+            self.refcounts[bid] = self.refcounts.get(bid, 0) + 1
+            self.cached.pop(bid, None)            # no longer ref-0
+        self.tables[seq_id] = list(hits[:n_blocks])
+        self._chains[seq_id] = list(chain[:n_blocks])
+        if self._m_alloc is not None:
+            self._m_hit_tok.inc(cached_tokens)
+            self._update_gauges()
+        return cached_tokens
+
+    def match_prefix(self, tokens) -> int:
+        """Pure lookup: tokens a fresh :meth:`adopt_prefix` would cover."""
+        if not self.prefix_cache:
+            return 0
+        bs = self.cfg.block_size
+        parent, n = None, 0
+        for b0 in range(0, (len(tokens) // bs) * bs, bs):
+            parent = _chain_hash(parent, tokens[b0:b0 + bs])
+            if parent not in self.hash_to_block:
+                break
+            n += 1
+        return min(n * bs, max(len(tokens) - 1, 0))
+
+    def note_filled(self, seq_id: int, context_tokens, fed: int) -> None:
+        """Register every newly FULL block of ``seq_id`` in the hash map.
+
+        ``context_tokens[:fed]`` is the token content now resident in the
+        cache.  Only full blocks are content-addressed (a partial block's
+        tail is still being written); a hash already claimed by another
+        block leaves this one unregistered (duplicate content frees
+        normally instead of colliding).
+        """
+        if not self.prefix_cache:
+            return
+        bs = self.cfg.block_size
+        table = self.tables.get(seq_id, [])
+        chain = self._chains.setdefault(seq_id, [])
+        while len(chain) < fed // bs:
+            i = len(chain)
+            parent = chain[i - 1] if i else None
+            h = _chain_hash(parent, context_tokens[i * bs:(i + 1) * bs])
+            chain.append(h)
+            bid = table[i]
+            if h not in self.hash_to_block and bid not in self.block_hash:
+                self.hash_to_block[h] = bid
+                self.block_hash[bid] = h
+
+    def make_writable(self, seq_id: int, start_tok: int,
+                      end_tok: int) -> list[tuple[int, int]] | None:
+        """Copy-on-write barrier for writes into positions
+        [``start_tok``, ``end_tok``).
+
+        Every block the span touches that is SHARED (ref > 1) or
+        hash-REGISTERED is replaced in ``seq_id``'s table by a fresh
+        block; the returned ``(src, dst)`` pairs are the device-side page
+        copies the engine must apply before scattering.  Returns None
+        (changing nothing) when the pool cannot supply the copies — the
+        scheduler treats that like any other alloc failure (evict or
+        defer).  After a successful call, every block in the span has
+        refcount 1 and no registered hash: no shared or cached block is
+        ever written in place.
+        """
+        if end_tok <= start_tok:
+            return []
+        bs = self.cfg.block_size
+        table = self.tables.get(seq_id, [])
+        lo, hi = start_tok // bs, blocks_for(end_tok, bs)
+        need = [i for i in range(lo, min(hi, len(table)))
+                if self.refcounts.get(table[i], 0) > 1
+                or table[i] in self.block_hash]
+        if not need:
+            return []
+        fresh = self._alloc(len(need))
+        if fresh is None:
+            return None
+        copies = []
+        chain = self._chains.get(seq_id, [])
+        for i, dst in zip(need, fresh):
+            src = table[i]
+            copies.append((src, dst))
+            table[i] = dst
+            self._decref(src)
+            if i < len(chain):
+                del chain[i:]         # rewritten span: chain re-derives
+        if self._m_alloc is not None:
+            self._m_alloc.inc(len(need))
+            self._m_cow.inc(len(need))
+            self._update_gauges()
+        return copies
+
+    # ------------------------------------------------------------------
+    # Invariants (driven by the property suite after every operation)
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        """Assert the full bookkeeping contract; raises AssertionError
+        naming the violated clause.  O(pool + tables) — test/debug use."""
+        n = self.cfg.num_blocks
+        free = set(self.pool._free)
+        cached = set(self.cached)
+        referenced = set(self.refcounts)
+        assert NULL_BLOCK not in free | cached | referenced, \
+            "null block entered the pool"
+        # refcounts == live table references, exactly
+        counts: dict[int, int] = {}
+        for t in self.tables.values():
+            for b in t:
+                counts[b] = counts.get(b, 0) + 1
+        assert counts == self.refcounts, \
+            f"refcounts {self.refcounts} != table references {counts}"
+        assert all(r >= 1 for r in self.refcounts.values()), \
+            "zero/negative refcount retained"
+        # freelist ∪ cached ∪ referenced partitions blocks 1..n-1
+        assert free | cached | referenced == set(range(1, n)), \
+            "pool partition lost blocks"
+        assert not (free & cached) and not (free & referenced) \
+            and not (cached & referenced), "pool partition overlaps"
+        # hash map consistency: registered hashes point at blocks that
+        # carry that hash; cached blocks are exactly ref-0 registered ones
+        for h, b in self.hash_to_block.items():
+            assert self.block_hash.get(b) == h, \
+                f"hash_to_block[{h[:8]}]={b} but block_hash={self.block_hash.get(b)}"
+        for b, h in self.cached.items():
+            assert self.hash_to_block.get(h) == b, \
+                f"cached block {b} not registered under its hash"
+        for b in self.block_hash:
+            assert b in cached or b in referenced, \
+                f"registered block {b} is on the freelist"
 
 
 def default_num_blocks(slots: int, max_len: int, block_size: int) -> int:

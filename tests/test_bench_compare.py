@@ -29,6 +29,8 @@ BASE = {
                                "serve_ticks_total{kind=decode}": 12},
                   "gauges": {"serve_queue_depth": 0,
                              "serve_kv_blocks_free": 32}}},
+    "paged_prefix": {"cache_hit_rate": 0.42, "tokens_per_s": 30.0},
+    "paged_spec": {"accepted_per_step": 3.5, "acceptance_rate": 0.9},
 }
 
 
@@ -111,6 +113,29 @@ def test_latency_drift_tolerated_but_blowup_fails():
     assert _errors(cur, latency_tolerance=100.0) == []
     errs = _errors(cur, wall_tolerance=100.0)
     assert len(errs) == 1 and "decode_p95_ms" in errs[0]
+
+
+def test_rate_metrics_gate_tightly_but_allow_jitter():
+    """`*_rate` / `accepted_per_step` are serving-quality ratios: tiny
+    jitter inside the 0.9x floor passes, a real collapse fails, higher is
+    always fine, and the knob is independent of --ratio-floor."""
+    assert bench_compare.classify("paged_prefix/cache_hit_rate") == "rate"
+    assert bench_compare.classify("paged_spec/accepted_per_step") == "rate"
+    assert bench_compare.classify("paged_spec/acceptance_rate") == "rate"
+    cur = copy.deepcopy(BASE)
+    cur["paged_prefix"]["cache_hit_rate"] = 0.40       # jitter: fine
+    cur["paged_spec"]["accepted_per_step"] = 3.9       # higher: fine
+    assert _errors(cur) == []
+    cur["paged_prefix"]["cache_hit_rate"] = 0.1        # sharing collapsed
+    errs = _errors(cur)
+    assert len(errs) == 1 and "cache_hit_rate" in errs[0]
+    assert "cache-sharing/acceptance regression" in errs[0]
+    assert _errors(cur, rate_floor=0.2) == []          # its own knob
+    assert len(_errors(cur, ratio_floor=0.01)) == 1
+    cur = copy.deepcopy(BASE)
+    cur["paged_spec"]["accepted_per_step"] = 0.5       # drafts stopped landing
+    errs = _errors(cur)
+    assert len(errs) == 1 and "accepted_per_step" in errs[0]
 
 
 def test_workload_config_is_compared_exactly():

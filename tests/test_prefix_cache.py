@@ -1,0 +1,362 @@
+"""Block-level prefix cache: hash-chain lookup, refcounted sharing,
+copy-on-write, LRU eviction — and the property harness driving random
+submit/feed/release/evict interleavings against the bookkeeping
+invariants (``PagedKVCache.check_invariants``).
+
+The harness has two entry points sharing one op driver:
+
+* a hypothesis ``@given`` test (via ``_hypothesis_compat`` — skips
+  cleanly when hypothesis is absent), and
+* a deterministic seeded sweep (plain pytest, 200+ interleavings) so the
+  invariants are exercised in every environment, dev extras or not.
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_smoke_config
+from repro.models import lm, params as P
+from repro.serve import (PagedCacheConfig, PagedServeConfig,
+                         PagedServingEngine, PagedKVCache, Request)
+from repro.serve.kv_cache import _chain_hash
+
+F32 = dict(param_dtype=jnp.float32, act_dtype=jnp.float32)
+
+
+def _cfg(**kw):
+    return get_smoke_config("qwen2-0.5b").replace(**F32, **kw)
+
+
+def _params(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return P.init_params(key, lm.lm_param_specs(cfg), cfg.param_dtype)
+
+
+def _kv(num_blocks=9, block_size=2, max_len=16, cache=True):
+    return PagedKVCache(
+        PagedCacheConfig(num_blocks=num_blocks, block_size=block_size,
+                         max_len=max_len),
+        enable_prefix_cache=cache)
+
+
+# ---------------------------------------------------------------------------
+# Chain hash + lookup unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_chain_hash_is_prefix_addressed():
+    h1 = _chain_hash(None, [5, 9])
+    assert h1 == _chain_hash(None, [5, 9])
+    assert h1 != _chain_hash(None, [5, 10])
+    # the chain binds the WHOLE prefix: same block tokens under different
+    # parents hash differently
+    assert _chain_hash(h1, [7, 7]) != _chain_hash(None, [7, 7])
+    # and token boundaries can't alias across values ([1,23] vs [12,3])
+    assert _chain_hash(None, [1, 23]) != _chain_hash(None, [12, 3])
+
+
+def test_adopt_prefix_hits_full_blocks_only():
+    kv = _kv()
+    kv.ensure(0, 5)                       # 3 blocks, last one partial
+    kv.note_filled(0, [5, 9, 17, 3, 8], 5)
+    assert len(kv.hash_to_block) == 2     # only the 2 FULL blocks register
+    kv.release(0)
+    assert len(kv.cached) == 2            # registered blocks park on LRU
+    assert kv.pool.free_blocks == 6       # the partial block freed outright
+    # identical context: both full blocks hit; the partial tail re-feeds
+    assert kv.adopt_prefix(1, [5, 9, 17, 3, 8]) == 4
+    assert len(kv.tables[1]) == 2
+    assert not kv.cached                  # hits left the LRU list
+    # diverging second block: only the first hits
+    assert kv.adopt_prefix(2, [5, 9, 99, 99, 1]) == 2
+    kv.check_invariants()
+
+
+def test_adopt_prefix_caps_below_full_context():
+    """A fully-cached prompt still re-feeds its LAST token (the engine
+    needs its logits), through the adopted final block — the write there
+    is what exercises copy-on-write."""
+    kv = _kv()
+    toks = [5, 9, 17, 3]                  # exactly 2 full blocks
+    kv.ensure(0, 4)
+    kv.note_filled(0, toks, 4)
+    kv.release(0)
+    got = kv.adopt_prefix(1, list(toks))
+    assert got == 3                       # capped at len-1 ...
+    assert len(kv.tables[1]) == 2         # ... but BOTH blocks adopted
+    cow = kv.make_writable(1, 3, 4)
+    assert len(cow) == 1                  # the registered block copies out
+    kv.check_invariants()
+
+
+def test_shared_release_keeps_neighbours_blocks():
+    """THE refcount regression (PR-4 latent bug): releasing one of two
+    prefix-sharing sequences must not free blocks the other still maps."""
+    kv = _kv()
+    toks = [5, 9, 17, 3, 8, 2]
+    kv.ensure(0, 6)
+    kv.note_filled(0, toks, 6)
+    assert kv.adopt_prefix(1, toks + [7, 7]) == 6
+    shared = list(kv.tables[1])
+    assert shared == kv.tables[0]
+    assert all(kv.refcounts[b] == 2 for b in shared)
+    kv.release(0)                         # the DONOR leaves first
+    assert kv.tables[1] == shared         # adopter's table intact
+    assert all(kv.refcounts[b] == 1 for b in shared)
+    assert kv.pool.free_blocks == 5       # nothing shared hit the freelist
+    kv.check_invariants()
+    kv.release(1)
+    assert len(kv.cached) == 3            # now ref-0: parked, not freed
+    kv.check_invariants()
+
+
+def test_lru_eviction_unregisters_oldest_first():
+    kv = _kv(num_blocks=7, block_size=2, max_len=8)
+    for sid, toks in enumerate(([5, 9], [17, 3], [8, 2])):
+        kv.ensure(sid, 2)
+        kv.note_filled(sid, toks, 2)
+    old, mid, new = (kv.tables[s][0] for s in (0, 1, 2))
+    for sid in (0, 1, 2):
+        kv.release(sid)
+    assert list(kv.cached) == [old, mid, new]
+    assert kv.pool.free_blocks == 3
+    kv.ensure(9, 8)                       # needs 4: 3 free + evict oldest
+    assert old not in kv.cached and kv.block_hash.get(old) is None
+    assert mid in kv.cached and new in kv.cached
+    assert kv.adopt_prefix(10, [17, 3, 1]) == 2   # mid's content survives
+    kv.check_invariants()
+
+
+def test_cache_off_is_plain_pool():
+    kv = _kv(cache=False)
+    kv.ensure(0, 6)
+    kv.note_filled(0, [1, 2, 3, 4, 5, 6], 6)
+    assert not kv.hash_to_block
+    assert kv.adopt_prefix(1, [1, 2, 3, 4, 5, 6]) == 0
+    assert kv.make_writable(0, 0, 6) == []
+    free_before = kv.pool.free_blocks
+    assert kv.release(0) == 3
+    assert kv.pool.free_blocks == free_before + 3   # straight to freelist
+    kv.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Property harness: random interleavings preserve the invariants
+# ---------------------------------------------------------------------------
+
+# Token templates with deliberately overlapping prefixes, so random
+# admissions constantly share, diverge mid-block, and re-hit the LRU.
+_TEMPLATES = ([5, 9, 17, 3, 8, 2, 30, 11],
+              [5, 9, 17, 3, 1, 1, 2, 7],
+              [5, 9, 40, 40, 8, 2],
+              [12, 33, 7, 9])
+
+
+class _HostModel:
+    """Drives one PagedKVCache through scheduler-shaped op sequences,
+    mirroring just enough sequence state (tokens, fed) to issue realistic
+    adopt/feed/release calls.  ``check_invariants`` runs after every op —
+    a violation surfaces as an AssertionError naming the broken clause.
+    """
+
+    def __init__(self, rng: random.Random, chunk=3):
+        self.rng = rng
+        self.kv = _kv(num_blocks=rng.choice((6, 8, 11)), block_size=2,
+                      max_len=16)
+        self.chunk = chunk
+        self.live: dict[int, dict] = {}   # sid -> {tokens, fed}
+        self.next_sid = 0
+        self.cows = 0
+
+    def _tokens(self):
+        t = list(self.rng.choice(_TEMPLATES))
+        if self.rng.random() < 0.5:       # mutate the tail: mid-block forks
+            t = t[:self.rng.randrange(2, len(t))] + [self.rng.randrange(50)]
+        return t[:self.kv.cfg.max_len]
+
+    def op_admit(self):
+        sid, self.next_sid = self.next_sid, self.next_sid + 1
+        toks = self._tokens()
+        cached = self.kv.adopt_prefix(sid, toks)
+        assert cached < len(toks)         # at least one token left to feed
+        if not self.kv.has_room(sid, min(len(toks), cached + self.chunk)):
+            self.kv.release(sid)          # rollback, like the scheduler
+            return
+        self.live[sid] = dict(tokens=toks, fed=cached)
+
+    def op_feed(self):
+        if not self.live:
+            return
+        sid = self.rng.choice(sorted(self.live))
+        s = self.live[sid]
+        want = min(len(s["tokens"]) - s["fed"], self.chunk)
+        if want == 0 or not self.kv.ensure(sid, s["fed"] + want):
+            return
+        cow = self.kv.make_writable(sid, s["fed"], s["fed"] + want)
+        if cow is None:
+            return                        # pool too tight for the copies
+        self.cows += len(cow)
+        # COW must never leave a written-span block shared or registered
+        bs = self.kv.cfg.block_size
+        table = self.kv.tables[sid]
+        for i in range(s["fed"] // bs, -(-(s["fed"] + want) // bs)):
+            assert self.kv.refcounts[table[i]] == 1
+            assert table[i] not in self.kv.block_hash
+        s["fed"] += want
+        self.kv.note_filled(sid, s["tokens"], s["fed"])
+
+    def op_release(self):
+        if not self.live:
+            return
+        sid = self.rng.choice(sorted(self.live))
+        self.kv.release(sid)
+        del self.live[sid]
+
+    def run(self, n_ops: int):
+        ops = (self.op_admit, self.op_feed, self.op_feed, self.op_release)
+        for _ in range(n_ops):
+            self.rng.choice(ops)()
+            self.kv.check_invariants()
+        for sid in sorted(self.live):
+            self.kv.release(sid)
+            self.kv.check_invariants()
+        # full drain partitions the pool into freelist + LRU only
+        n = self.kv.cfg.num_blocks - 1
+        assert self.kv.pool.free_blocks + len(self.kv.cached) == n
+
+
+def _drive(seed: int, n_ops: int = 40) -> int:
+    m = _HostModel(random.Random(seed))
+    m.run(n_ops)
+    return m.cows
+
+
+def test_interleavings_deterministic_sweep():
+    """200+ seeded random interleavings (the always-on stand-in for the
+    hypothesis sweep): every op sequence preserves refcount/partition/
+    hash-map invariants, and the sweep as a whole exercises COW."""
+    cows = sum(_drive(seed) for seed in range(220))
+    assert cows > 0, "sweep never hit a copy-on-write — templates too tame"
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=10**9))
+def test_interleavings_hypothesis(seed):
+    """The same driver under hypothesis (skips when not installed)."""
+    _drive(seed)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: bit-identity, COW under serving, eviction regression
+# ---------------------------------------------------------------------------
+
+
+_SHARED = [5, 9, 17, 3, 8, 2, 30, 11]
+
+
+def _serve(params, cfg, reqs, **kw):
+    base = dict(slots=2, max_len=64, block_size=4, prefill_chunk=3)
+    scfg = PagedServeConfig(**{**base, **kw})
+    eng = PagedServingEngine(params, cfg, scfg)
+    for r in reqs:
+        eng.submit(r)
+    ticks = 0
+    while eng.scheduler.has_work():
+        eng.step()
+        eng.kv.check_invariants()
+        ticks += 1
+        assert ticks < 500
+    return eng, {r.rid: r.generated for r in eng.finished}
+
+
+def _reqs(temps=(0.0, 0.0, 0.7)):
+    return [Request(rid=i, prompt=_SHARED + [20 + i, 21 + i],
+                    max_new_tokens=5, temperature=t)
+            for i, t in enumerate(temps)]
+
+
+def test_tokens_bit_identical_cache_on_vs_off_stochastic():
+    """The tentpole contract: per-request tokens (greedy AND sampled) are
+    bit-identical with prefix caching on vs off on a stochastic backend.
+    Both runs use content-chain rng — caching only changes WHERE context
+    KV comes from, and content-derived SC keys make that invisible."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=512)
+    params = _params(cfg)
+    e_off, off = _serve(params, cfg, _reqs(), rng_mode="content")
+    e_on, on = _serve(params, cfg, _reqs(), prefix_cache=True)
+    assert on == off
+    # slots=2: the first two admit together before any block registers,
+    # so the LATE request is the one that adopts the full shared prefix
+    hits = e_on.metrics.value("serve_prefix_cache_hit_tokens_total")
+    assert hits and hits >= (len(_SHARED) // 4) * 4
+    assert e_on.metrics.value("serve_prefill_tokens_total") < \
+        e_off.metrics.value("serve_prefill_tokens_total")
+
+
+def test_cow_fires_when_prompt_is_block_multiple():
+    """A fully-cached block-multiple prompt adopts every block and
+    re-feeds its last token through copy-on-write: the shared block is
+    never written in place, and outputs still match the uncached run."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=512)
+    prompt = _SHARED[:8]                   # 8 tokens = 2 full 4-blocks
+    reqs = lambda: [Request(rid=i, prompt=list(prompt), max_new_tokens=4)
+                    for i in range(2)]
+    params = _params(cfg)
+    # slots=1 serialises the two requests, so the second finds the whole
+    # prompt registered and must COW its final adopted block
+    _, off = _serve(params, cfg, reqs(), rng_mode="content", slots=1)
+    e_on, on = _serve(params, cfg, reqs(), prefix_cache=True, slots=1)
+    assert on == off
+    assert e_on.metrics.value("serve_prefix_cache_cow_total") >= 1
+
+
+def test_eviction_of_prefix_sharing_victim_regression():
+    """Engine-level refcount regression: under pool pressure the LIFO
+    victim shares prefix blocks with the surviving row — eviction must
+    only drop the victim's REFERENCES, and every request must still
+    produce its roomy-pool tokens after resume."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=512)
+    params = _params(cfg)
+    mk = lambda: [Request(rid=i, prompt=_SHARED + [20 + i], max_new_tokens=12)
+                  for i in range(2)]
+    roomy_e, roomy = _serve(params, cfg, mk(), prefix_cache=True, max_len=28)
+    # 9+12=21 tokens/seq = 6 blocks each at bs=4; 7 usable blocks even with
+    # the prefix's 2 shared can't hold both tails: someone evicts + resumes.
+    tight_e, tight = _serve(params, cfg, mk(), prefix_cache=True, max_len=28,
+                            num_blocks=8)
+    assert tight_e.evictions > 0, "pool was meant to force an eviction"
+    assert roomy_e.evictions == 0
+    assert tight == roomy
+    tight_e.kv.check_invariants()
+
+
+def test_resumed_victim_readopts_its_own_blocks():
+    """An evicted request's registered blocks park on the LRU; on
+    re-admission it adopts them back instead of re-prefilling from
+    scratch (recompute eviction becomes nearly free with the cache on)."""
+    cfg = _cfg()
+    params = _params(cfg)
+    mk = lambda: [Request(rid=i, prompt=_SHARED + [20 + i], max_new_tokens=12)
+                  for i in range(2)]
+    e, _ = _serve(params, cfg, mk(), prefix_cache=True, max_len=28,
+                  num_blocks=8)
+    assert e.evictions > 0
+    lookups = e.metrics.value("serve_prefix_cache_lookups_total")
+    hits = e.metrics.value("serve_prefix_cache_hit_tokens_total")
+    assert lookups >= 3                   # initial admissions + re-admission
+    assert hits > len(_SHARED) - 4        # resume re-adopted cached blocks
+
+
+def test_null_block_never_shared_or_cached():
+    kv = _kv()
+    kv.ensure(0, 6)
+    kv.note_filled(0, [1, 2, 3, 4, 5, 6], 6)
+    kv.release(0)
+    assert 0 not in kv.cached and 0 not in kv.refcounts
+    assert 0 not in kv.block_hash
+    with pytest.raises(ValueError):
+        kv.pool.free([0])

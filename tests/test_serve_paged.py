@@ -290,6 +290,132 @@ def test_finished_blocks_recycle_mid_batch(key):
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding: draft/verify greedy == plain decode, token for token
+# ---------------------------------------------------------------------------
+
+
+def _spec_reqs():
+    return [Request(rid=0, prompt=[5, 9, 17, 3], max_new_tokens=8),
+            Request(rid=1, prompt=[40, 2, 8, 30, 7, 11], max_new_tokens=6)]
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_speculative_matches_plain_greedy(key, k):
+    """Draft-k/verify emits EXACTLY the plain decode tokens for every k:
+    the verifier replays the non-speculative per-(request, position) SC
+    keys, so acceptance only changes how fast tokens appear, never which."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=512)
+    params = _params(key, cfg)
+    _, ref = _run_paged(params, cfg, _spec_reqs(), slots=2)
+    eng, got = _run_paged(params, cfg, _spec_reqs(), slots=2,
+                          speculative=True, spec_k=k)
+    assert got == ref
+    drafted = eng.metrics.value("serve_spec_drafted_tokens_total")
+    accepted = eng.metrics.value("serve_spec_accepted_tokens_total")
+    assert drafted and drafted % k == 0
+    assert 0 <= accepted <= drafted
+
+
+def test_speculative_fused_verify_matches_plain(key):
+    """Verification through the fused paged-attention kernel (the serving
+    config speculation targets) still reproduces plain greedy decode —
+    the draft pass stays on the unfused path regardless."""
+    cfg = _cfg(paged_attn="fused")
+    params = _params(key, cfg)
+    _, ref = _run_paged(params, cfg, _spec_reqs(), slots=2)
+    eng, got = _run_paged(params, cfg, _spec_reqs(), slots=2,
+                          speculative=True, spec_k=3)
+    assert got == ref
+    assert eng.metrics.value("serve_spec_drafted_tokens_total")
+
+
+def test_speculative_disagreeing_draft_still_exact(key):
+    """A deliberately mismatched draft backend (exact drafting for a
+    noisy stochastic verifier) exercises the rejection path; the output
+    contract is unchanged because rejected positions fall back to the
+    verifier's own argmax."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=64)   # noisy verifier
+    params = _params(key, cfg)
+    _, ref = _run_paged(params, cfg, _spec_reqs(), slots=2)
+    eng, got = _run_paged(params, cfg, _spec_reqs(), slots=2,
+                          speculative=True, spec_k=4,
+                          draft_backend="exact")
+    assert got == ref
+    drafted = eng.metrics.value("serve_spec_drafted_tokens_total")
+    accepted = eng.metrics.value("serve_spec_accepted_tokens_total")
+    assert accepted < drafted, "exact-vs-moment drafts should miss sometimes"
+
+
+def test_speculative_mixed_batch_and_eviction(key):
+    """Speculation composes with the rest of the engine: a sampled
+    (non-greedy) neighbour shares verify ticks with the spec row, and a
+    tight pool forces the usual evict/resume — tokens still match the
+    roomy non-speculative run for every request."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=512)
+    params = _params(key, cfg)
+    mk = lambda: [
+        Request(rid=0, prompt=[5, 9, 17, 3, 8, 2, 30, 11, 7, 6],
+                max_new_tokens=16, temperature=0.0),
+        Request(rid=1, prompt=[40, 2, 8, 30, 7, 11, 2, 4, 9, 9],
+                max_new_tokens=16, temperature=0.6)]
+    # 10 + 16 = 26 tokens/seq = 7 blocks each; 9 usable blocks cannot hold
+    # both even with the spec row racing ahead, so one evicts and resumes.
+    roomy_e, roomy = _run_paged(params, cfg, mk(), slots=2, max_len=28,
+                                prefill_chunk=4)
+    tight_e, tight = _run_paged(params, cfg, mk(), slots=2, max_len=28,
+                                prefill_chunk=4, num_blocks=10,
+                                speculative=True, spec_k=2)
+    assert roomy_e.evictions == 0
+    assert tight_e.evictions > 0, "pool was meant to force an eviction"
+    assert tight == roomy
+    assert tight_e.metrics.value("serve_spec_accepted_tokens_total")
+
+
+def test_spec_counters_match_host_replay(key):
+    """The acceptance telemetry is ARITHMETIC over the engine's own
+    draft/verify log — histogram count/sum and both counters must equal a
+    host-side replay of the acceptance rule on the logged tokens."""
+    cfg = _cfg(sc_backend="moment", sc_nbit=64)
+    params = _params(key, cfg)
+    eng, got = _run_paged(params, cfg, _spec_reqs(), slots=2,
+                          speculative=True, spec_k=3,
+                          draft_backend="exact")
+    log = eng.spec_log
+    assert log, "greedy requests must take speculative ticks"
+    replay = []
+    for e in log:
+        a = 0
+        while a < len(e["drafted"]) and e["drafted"][a] == e["verified"][a]:
+            a += 1
+        replay.append(a)
+        assert e["accepted"] == a
+        assert len(e["verified"]) == e["k"] + 1
+        # commit = accepted drafts + 1 verifier token, clipped by finish
+        assert 1 <= e["committed"] <= a + 1
+    assert eng.metrics.value("serve_spec_drafted_tokens_total") == \
+        sum(e["k"] for e in log)
+    assert eng.metrics.value("serve_spec_accepted_tokens_total") == \
+        sum(replay)
+    hist = eng.metrics.histogram("spec_accepted_tokens")
+    assert hist.count() == len(log)
+    assert hist.sum() == float(sum(replay))
+    # every generated token of a greedy request is accounted for by some
+    # tick's commit (speculative or plain)
+    committed = sum(e["committed"] for e in log)
+    assert committed <= sum(len(v) for v in got.values())
+
+
+def test_speculative_config_validation(key):
+    cfg = _cfg()
+    params = _params(key, cfg)
+    with pytest.raises(ValueError, match="spec_k"):
+        _paged_engine(params, cfg, speculative=True, spec_k=0)
+    with pytest.raises(ValueError, match="unknown SC backend"):
+        _paged_engine(params, cfg, speculative=True,
+                      draft_backend="no-such-backend")
+
+
+# ---------------------------------------------------------------------------
 # Arch-collector lifecycle (close idempotency + detach-on-raise)
 # ---------------------------------------------------------------------------
 

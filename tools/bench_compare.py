@@ -26,6 +26,12 @@ Per-metric tolerance classes (suffix-matched on the leaf key):
                             bulk wall metrics);
 * ``*speedup*`` / ``*tokens_per_s`` — higher is better: fail below
                             ``--ratio-floor``x baseline (default 0.1x);
+* ``*_rate`` / ``accepted_per_step`` — serving quality ratios (prefix-
+                            cache hit rate, speculative acceptance):
+                            higher is better, fail below
+                            ``--rate-floor``x baseline (default 0.9x —
+                            these are workload-determined, not
+                            wall-clock-paced, so the floor is tight);
 * ``generated_tokens`` / ``ticks`` / ``evictions`` — scheduling counts
                             driven by real time (the serve bench paces
                             arrivals with the wall clock), so they get
@@ -65,10 +71,12 @@ DEFAULT_BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
 WALL_TOLERANCE = 20.0  # x baseline for *_us / *_s metrics
 LATENCY_TOLERANCE = 20.0  # x baseline for *_ms latency metrics
 RATIO_FLOOR = 0.1  # x baseline for speedup / throughput metrics
+RATE_FLOOR = 0.9  # x baseline for hit-rate / acceptance-rate metrics
 COUNT_SLACK = 5.0  # additive slack for scheduler counts (0 baselines)
 EXACT_RTOL = 1e-6  # float round-off for deterministic metrics
 
 _COUNT_KEYS = {"generated_tokens", "ticks", "evictions"}
+_RATE_KEYS = {"accepted_per_step"}
 
 
 def classify(path: str) -> str:
@@ -86,6 +94,8 @@ def classify(path: str) -> str:
         return "exact"
     if "gauges/" in path or path.startswith("gauges"):
         return "gauge"
+    if key.endswith("_rate") or key in _RATE_KEYS:
+        return "rate"
     if key.endswith("_total") or key.endswith("_count"):
         return "counter"
     if "speedup" in key or key.endswith("tokens_per_s"):
@@ -114,7 +124,7 @@ def _leaves(payload, prefix=""):
 
 
 def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor,
-                latency_tolerance):
+                latency_tolerance, rate_floor=RATE_FLOOR):
     rule = classify(path)
     if rule == "ignore":
         return None
@@ -163,6 +173,15 @@ def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor,
                 f"{path}: {cur:g} fell below {ratio_floor:g}x the "
                 f"baseline {base:g} (throughput/speedup regression)"
             )
+    elif rule == "rate":
+        # hit/acceptance rates are workload-determined, not wall-clock-
+        # paced: a drop means sharing or speculation got worse, not that
+        # the runner was slow — gate them tightly, higher is fine
+        if cur < base * rate_floor:
+            return (
+                f"{path}: {cur:g} fell below {rate_floor:g}x the "
+                f"baseline {base:g} (cache-sharing/acceptance regression)"
+            )
     elif rule == "count":
         # wall-clock-paced counts: only an upward blowup is a regression
         # (runner speed legitimately moves these in both directions)
@@ -190,6 +209,7 @@ def compare_payloads(
     wall_tolerance=WALL_TOLERANCE,
     ratio_floor=RATIO_FLOOR,
     latency_tolerance=LATENCY_TOLERANCE,
+    rate_floor=RATE_FLOOR,
     check_gauges=False,
 ):
     """Every regression of ``current`` against ``baseline`` (else []).
@@ -217,6 +237,7 @@ def compare_payloads(
             wall_tolerance=wall_tolerance,
             ratio_floor=ratio_floor,
             latency_tolerance=latency_tolerance,
+            rate_floor=rate_floor,
         )
         if err:
             errors.append(f"{name}:{err}")
@@ -236,6 +257,7 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--wall-tolerance", type=float, default=WALL_TOLERANCE)
     ap.add_argument("--ratio-floor", type=float, default=RATIO_FLOOR)
+    ap.add_argument("--rate-floor", type=float, default=RATE_FLOOR)
     ap.add_argument(
         "--latency-tolerance", type=float, default=LATENCY_TOLERANCE
     )
@@ -289,6 +311,7 @@ def main(argv=None) -> int:
             wall_tolerance=args.wall_tolerance,
             ratio_floor=args.ratio_floor,
             latency_tolerance=args.latency_tolerance,
+            rate_floor=args.rate_floor,
             check_gauges=args.check_gauges,
         )
         n_metrics = len(_leaves(baseline))

@@ -1,6 +1,6 @@
 """Docs checker: markdown links resolve, and the code snippets embedded in
-docs/backends.md / docs/scaling.md actually run against the installed
-package.
+docs/backends.md / docs/scaling.md / docs/prefix_caching.md actually run
+against the installed package.
 
     PYTHONPATH=src python tools/check_docs.py            # links + snippets
     PYTHONPATH=src python tools/check_docs.py --links-only
@@ -27,9 +27,10 @@ FENCE_RE = re.compile(r"^```(\w*)\s*$")
 # Files whose links are checked.
 LINK_FILES = ["README.md", "docs/paper_map.md", "docs/backends.md",
               "docs/scaling.md", "docs/serving.md", "docs/kernels.md",
-              "docs/observability.md"]
+              "docs/observability.md", "docs/prefix_caching.md"]
 # Files whose ```python blocks are executed.
-SNIPPET_FILES = ["docs/backends.md", "docs/scaling.md"]
+SNIPPET_FILES = ["docs/backends.md", "docs/scaling.md",
+                 "docs/prefix_caching.md"]
 
 
 def check_links(relpath: str) -> list[str]:
