@@ -12,7 +12,7 @@ import time
 
 from benchmarks import (arch_trace_bench, fig7_accuracy, fig8_variance,
                         fig9_cycles, fig10_energy, fig11_area, roofline,
-                        sc_matmul_bench)
+                        sc_matmul_bench, zoo_bench)
 
 SUITES = {
     "fig7": fig7_accuracy.main,     # accuracy statistics (paper Fig. 7)
@@ -22,6 +22,7 @@ SUITES = {
     "fig11": fig11_area.main,       # area (paper Fig. 11)
     "scmac": sc_matmul_bench.main,  # the SC-MAC framework matmul + roofline
     "arch": arch_trace_bench.main,  # array simulator: §V ratios from traces
+    "zoo": zoo_bench.main,          # model families x backends x nbit
     "roofline": roofline.main,      # 40-cell dry-run roofline table
 }
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro import arch, sc
 from repro.configs import get_smoke_config
 from repro.core import conversion, engine
-from repro.kernels import ops
+from repro.kernels.sc_mul import sc_mul_bitexact
 from repro.models import lm, params as params_lib
 
 key = jax.random.PRNGKey(0)
@@ -54,8 +54,8 @@ for backend in ("moment", "pallas_moment"):
           "nbit=1024")
 
 # --- 4. Packed bit-exact Pallas engine on raw probabilities --------------
-est = ops.sc_mul_bitexact(key, jnp.array([X_INT / 1024]),
-                          jnp.array([Y_INT / 1024]), nbit=2048)
+est = sc_mul_bitexact(key, jnp.array([X_INT / 1024]),
+                      jnp.array([Y_INT / 1024]), nbit=2048)
 print(f"pallas kernel: p_est={float(est[0]):.4f} (true {p_true:.4f})")
 
 # --- 5. End-to-end: an LM whose every matmul is the fused Pallas kernel --

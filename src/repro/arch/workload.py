@@ -76,8 +76,13 @@ def dense_workload(cfg, tokens: int) -> list[MatmulSite]:
             add("moe.wo", cfg.d_ff, d, n_layers * visits)
         else:
             _mlp_sites(add, cfg, n_layers)
-    # The logits head (lm._logits) is dense() WITHOUT an rng, so it always
-    # runs the exact path — deliberately absent here (keep in sync).
+    # Zoo sites outside the scanned blocks: the embeddings-frontend
+    # projection and the unembed head both dispatch through dense() with
+    # the threaded rng (sites "frontend_proj" / "unembed"), so they are
+    # part of the SC-routed workload too (keep in sync with lm.forward).
+    if cfg.frontend == "embeddings":
+        add("frontend.proj", d, d)
+    add("unembed", d, cfg.vocab)
     return sites
 
 

@@ -14,8 +14,9 @@ Hardware-faithful pieces modeled here:
   multiple of ``DTC_RESOLUTION_NS``.
 
 Probability encoding: an unsigned n-bit operand ``X`` maps to
-``P_X = X / 2^n ∈ [0, 1)``. Signed operands are handled at the scmac level via
-sign/magnitude split (the paper only treats unsigned operands).
+``P_X = X / 2^n ∈ [0, 1)``. Signed operands are handled by the canonical
+``sc/encoding.py`` via sign/magnitude split (the paper only treats unsigned
+operands).
 """
 
 from __future__ import annotations

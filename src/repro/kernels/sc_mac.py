@@ -12,8 +12,8 @@ and at the final k-step emits
     out = (mean + noise · sqrt(max(sum_p − sum_p2, 0) / nbit)) · scale
 
 which is the CLT-exact distribution of the SOT-MRAM MAC pop-count
-(mean = exact product, variance = Σ_k p(1−p)/nbit — see core/scmac.py for
-the derivation). All three dots ride the same operand tiles, so arithmetic
+(mean = exact product, variance = Σ_k p(1−p)/nbit — see the moment
+backend in sc/backends.py for the derivation). All three dots ride the same operand tiles, so arithmetic
 intensity is 3× a plain matmul at identical HBM traffic; the Gaussian noise
 is a (bm, bn) input tile consumed once at the epilogue.
 

@@ -23,9 +23,9 @@ generation so the bits live and die inside VMEM.
 
 Entropy source: random words are *inputs* (counter-based threefry generated
 by the caller) because ``pltpu.prng_random_bits`` has no CPU interpret path
-in this container. On real TPU hardware the ops.py wrapper can flip
-``inkernel_prng=True`` to generate the words on-chip and shrink the input
-stream by 32×; the kernel math is unchanged.
+in this container. On real TPU hardware the :func:`sc_mul_bitexact` wrapper
+can flip ``inkernel_prng=True`` to generate the words on-chip and shrink the
+input stream by 32×; the kernel math is unchanged.
 """
 
 from __future__ import annotations
@@ -86,7 +86,7 @@ def sc_mul_popcount(p_x_fx16, p_y_fx16, rand_x, rand_y, *,
 
     p_*_fx16: (M,) uint32 biases (p·2^16); rand_*: (M, NSLICES, W) uint32.
     nbit = 32·W stochastic cells per MUL. M must be a multiple of block_m
-    (ops.py pads).
+    (:func:`sc_mul_bitexact` pads).
     """
     m, nslices, w = rand_x.shape
     assert nslices == NSLICES and m % block_m == 0
@@ -105,3 +105,33 @@ def sc_mul_popcount(p_x_fx16, p_y_fx16, rand_x, rand_y, *,
         interpret=interpret,
     )(p_x_fx16.reshape(m, 1), p_y_fx16.reshape(m, 1), rand_x, rand_y)
     return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("nbit", "block_m", "interpret"))
+def sc_mul_bitexact(key, p_x, p_y, *, nbit: int = 1024, block_m: int = 8,
+                    interpret: bool = True):
+    """Batched bit-exact SC MUL of probability vectors via the Pallas engine.
+
+    The direct way to exercise the packed engine on raw probabilities
+    (quickstart / kernel tests); the model stack reaches it through the
+    ``pallas_bitexact`` registry backend instead.  p_x, p_y: (M,) float
+    probabilities.  Returns (M,) float estimates of p_x·p_y (pop-count /
+    nbit).  nbit must be a multiple of 32.
+    """
+    # local import: repro.sc pulls this module in through the backend
+    # registry, so a top-level import would be circular
+    from repro.sc import encoding
+
+    assert nbit % LANE_BITS == 0
+    w = nbit // LANE_BITS
+    m = p_x.shape[0]
+    px = encoding.pad_to(encoding.to_fx16(p_x), block_m, 0)
+    py = encoding.pad_to(encoding.to_fx16(p_y), block_m, 0)
+    mp = px.shape[0]
+    kx, ky = jax.random.split(key)
+    shape = (mp, NSLICES, w)
+    rx = jax.random.bits(kx, shape, jnp.uint32)
+    ry = jax.random.bits(ky, shape, jnp.uint32)
+    counts = sc_mul_popcount(px, py, rx, ry, block_m=block_m,
+                             interpret=interpret)
+    return counts[:m].astype(jnp.float32) / nbit

@@ -51,7 +51,8 @@ def main(argv=None):
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged continuous-batching "
                          "engine (block-pool KV cache + chunked prefill + "
-                         "eviction-on-OOM; attention-family archs)")
+                         "eviction-on-OOM; every family — ssm/hybrid archs "
+                         "carry state slots beside the block table)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (--paged)")
     ap.add_argument("--max-blocks", type=int, default=0,

@@ -302,7 +302,9 @@ def paged_copy_blocks(pages, src, dst):
     (``kv_cache.PagedKVCache.make_writable``) replaces a shared or
     hash-registered block in a sequence's table, the new block must carry
     the old block's K/V before the next scatter overwrites its tail.
-    pages: the ``{"k", "v"}`` pool dict of (layers, P, bs, kv, d) arrays;
+    pages: the pool dict with ``{"k", "v"}`` (layers, P, bs, kv, d)
+    arrays (extra non-paged leaves — e.g. a hybrid plan's ``"ssm"`` state
+    rows, which are slot- not block-indexed — pass through untouched);
     src/dst: equal-length block-id vectors.  Pure indexed-copy — one
     executable per distinct copy count (COW is rare and counts are tiny).
     """
@@ -312,7 +314,7 @@ def paged_copy_blocks(pages, src, dst):
     def cp(pool):
         return pool.at[:, dst].set(pool[:, src])
 
-    return {"k": cp(pages["k"]), "v": cp(pages["v"])}
+    return {**pages, "k": cp(pages["k"]), "v": cp(pages["v"])}
 
 
 def paged_attention_block(

@@ -13,6 +13,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.models import layers
+from repro.models.params import ParamSpec
+
+
+def frontend_specs(cfg):
+    """Learned output projection of the embeddings frontend: precomputed
+    frame/patch embeddings map into the backbone's residual space through
+    one (d_model, d_model) matmul — a matmul SITE like any other, so
+    multimodal inputs exercise the SC substrate from the first layer."""
+    d = cfg.d_model
+    return {"proj": ParamSpec((d, d), ("embed", None), "scaled")}
+
+
+def project_embeddings(x, p, cfg, key=None):
+    """Route frontend embeddings (b, s, d) through the output projection
+    on the configured substrate (site ``frontend_proj``)."""
+    return layers.dense(x, p["proj"], cfg,
+                        layers.site_key(key, "frontend_proj"),
+                        site="frontend_proj")
+
 
 def audio_frame_embeddings(key, batch: int, frames: int, d_model: int,
                            dtype=jnp.bfloat16):

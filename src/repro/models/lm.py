@@ -22,7 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models import attention, layers, moe, ssm
+from repro.models import attention, frontend, layers, moe, ssm
 from repro.models.params import ParamSpec, tree_map_specs
 
 
@@ -80,13 +80,21 @@ def lm_param_specs(cfg):
                                   ("embed", "vocab"), "scaled")
     if cfg.family == "hybrid":
         sp["shared"] = shared_block_specs(cfg)
+    if cfg.frontend == "embeddings":
+        sp["frontend"] = frontend.frontend_specs(cfg)
     return sp
 
 
-def _logits(x, params, cfg):
+def _logits(x, params, cfg, key=None):
+    """Output projection (site ``unembed``): ``key`` is the caller's rng
+    root — raw (2,) or per-row (..., 2) matching ``x``'s leading dims —
+    folded here with the unembed site salt."""
+    key = layers.site_key(key, "unembed")
     if cfg.tie_embeddings:
-        return layers.unembed(x, params["embed"], cfg).astype(jnp.float32)
-    return layers.dense(x, params["unembed"], cfg).astype(jnp.float32)
+        return layers.unembed(x, params["embed"], cfg, key).astype(
+            jnp.float32)
+    return layers.dense(x, params["unembed"], cfg, key,
+                        site="unembed").astype(jnp.float32)
 
 
 def _group(tree, ninv: int, per: int):
@@ -143,9 +151,12 @@ def _maybe_remat(fn, cfg):
 # --------------------------------------------------------------------------
 
 
-def _embed_inputs(params, inputs, cfg):
+def _embed_inputs(params, inputs, cfg, rng=None):
     if cfg.frontend == "embeddings" and inputs.ndim == 3:
-        return inputs.astype(cfg.act_dtype)
+        x = inputs.astype(cfg.act_dtype)
+        if "frontend" in params:
+            x = frontend.project_embeddings(x, params["frontend"], cfg, rng)
+        return x
     return layers.embed(inputs, params["embed"]).astype(cfg.act_dtype)
 
 
@@ -155,7 +166,7 @@ def encode(params, inputs, cfg, *, rng=None, constrain=None,
     states (b, s, d) after the last norm."""
     cst = constrain or (lambda v, *a: v)
     cstp = constrain_params or (lambda t: t)
-    x = _embed_inputs(params, inputs, cfg)
+    x = _embed_inputs(params, inputs, cfg, rng)
     b, s = x.shape[:2]
     x = cst(x, "batch", "resid_seq", None)
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -199,7 +210,7 @@ def forward(params, inputs, cfg, *, rng=None, constrain=None,
     cst = constrain or (lambda v, *a: v)
     x = encode(params, inputs, cfg, rng=rng, constrain=constrain,
                constrain_params=constrain_params)
-    logits = _logits(x, params, cfg)
+    logits = _logits(x, params, cfg, rng)
     return cst(logits, "batch", "seq", "vocab")
 
 
@@ -229,13 +240,16 @@ def lm_loss(params, batch, cfg, *, rng=None, constrain=None,
 
     @jax.checkpoint
     def chunk_nll(carry, inp):
+        tot, i = carry
         xi, li = inp                               # (b,c,d), (b,c)
-        logits = _logits(xi, params, cfg)          # (b,c,vocab) f32
+        key = None if rng is None else jax.random.fold_in(rng, i)
+        logits = _logits(xi, params, cfg, key)     # (b,c,vocab) f32
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, li[..., None], axis=-1)[..., 0]
-        return carry + nll.sum(), None
+        return (tot + nll.sum(), i + 1), None
 
-    total, _ = jax.lax.scan(chunk_nll, jnp.zeros((), jnp.float32), (xc, lc))
+    (total, _), _ = jax.lax.scan(
+        chunk_nll, (jnp.zeros((), jnp.float32), 0), (xc, lc))
     return total / (b * s)
 
 
@@ -265,22 +279,58 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
             "v": jnp.zeros((n, batch, max_len, kvh, hd), dtype)}
 
 
-def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
-    """Paged decode cache: one pool of ``num_blocks`` fixed-size token
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None,
+                     slots: int | None = None):
+    """Per-family paged decode cache (the device half of the cache plan —
+    ``serve/kv_cache.py:CachePlan``).
+
+    Attention families: one pool of ``num_blocks`` fixed-size token
     blocks per layer, addressed through per-sequence block tables
     (``serve/kv_cache.py`` owns the allocator; block 0 is the reserved
-    null block padding writes land in).  Attention families only — SSM
-    state is O(1) per sequence and has nothing to page."""
-    if cfg.family in ("ssm", "hybrid"):
-        raise ValueError(
-            f"paged KV cache needs an attention-family config, got "
-            f"family={cfg.family!r} (ssm state is fixed-size; use the "
-            "contiguous engine)")
+    null block padding writes land in).
+
+    SSM: state is O(1) per sequence — nothing to page.  The cache is one
+    fixed-size state + conv-tail row PER BATCH ROW (``slots``), carried
+    beside the block table (the block allocator still meters admission/
+    eviction token budget; the tables themselves go unused by the model).
+
+    Hybrid: both — SSM state rows for the backbone layers plus paged K/V
+    pools for the weight-shared attention invocations.
+    """
     dtype = dtype or cfg.act_dtype
     n = n_backbone_layers(cfg)
     kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.family in ("ssm", "hybrid"):
+        if slots is None:
+            raise ValueError(
+                f"family={cfg.family!r} carries fixed-size SSM state per "
+                "batch row — pass slots= to init_paged_cache")
+        one = ssm.init_ssm_cache(cfg, slots, dtype)
+        pages = {"ssm": jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (n,) + v.shape).copy(), one)}
+        if cfg.family == "hybrid":
+            ninv = n_shared_invocations(cfg)
+            pages["k"] = jnp.zeros((ninv, num_blocks, block_size, kvh, hd),
+                                   dtype)
+            pages["v"] = jnp.zeros((ninv, num_blocks, block_size, kvh, hd),
+                                   dtype)
+        return pages
     return {"k": jnp.zeros((n, num_blocks, block_size, kvh, hd), dtype),
             "v": jnp.zeros((n, num_blocks, block_size, kvh, hd), dtype)}
+
+
+def _reset_fresh_state(cache, lengths):
+    """Zero the SSM state/conv rows of sequences starting from position 0
+    this step (fresh admission or eviction resume) — the recurrent
+    analogue of a fresh block table.  cache leaves: (n, b, ...);
+    idle rows (lengths == 0, nothing fed) zero harmlessly."""
+    fresh = lengths == 0                                  # (b,)
+
+    def z(v):
+        m = fresh.reshape((1, -1) + (1,) * (v.ndim - 2))
+        return jnp.where(m, jnp.zeros_like(v), v)
+
+    return jax.tree.map(z, cache)
 
 
 def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
@@ -317,10 +367,15 @@ def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
     so two requests sharing a prompt prefix draw bitwise-identical SC
     bits there and cached KV blocks are safe to share.  Layer/call-site
     folds are identical in both forms.
+
+    SSM / hybrid families ride the same signature with the per-family
+    cache plan's pages (``init_paged_cache``): SSM layers feed their
+    chunk through :func:`ssm.ssm_stream` — token-recurrent, so a row's
+    state is BIT-identical whatever the chunking or batch composition —
+    and rows at ``lengths == 0`` (fresh admission or eviction resume)
+    zero their state first.  Hybrid adds the weight-shared attention
+    block over its own paged K/V pools per invocation.
     """
-    if cfg.family in ("ssm", "hybrid"):
-        raise ValueError("decode_paged supports attention-family configs "
-                         f"only, got family={cfg.family!r}")
     if rng is None and getattr(cfg, "paged_attn", "unfused") == "fused_sc":
         raise ValueError("paged_attn='fused_sc' draws stochastic attention "
                          "logits from per-request keys; pass rng=(b, 2) "
@@ -336,34 +391,93 @@ def decode_paged(params, pages, block_table, tokens, lengths, n_valid, cfg,
             per_tok = jnp.broadcast_to(rng[:, None, :],
                                        (b, sc, rng.shape[-1]))
             keys = layers.fold_keys(per_tok, positions)         # (b, sc, 2)
+    valid = jnp.arange(sc)[None, :] < n_valid[:, None]          # (b, sc)
 
-    def body(carry, scanned):
-        xc, idx = carry
-        lp, kp, vp = scanned
-        lkeys = layers.fold_keys(keys, idx)
-        h, kp, vp = attention.paged_attention_block(
-            layers.rms_norm(xc, lp["ln1"]), lp["attn"], cfg, positions,
-            layers.fold_keys(lkeys, 11), kp, vp, block_table, lengths,
-            n_valid)
-        xc = xc + h
-        fkey = layers.fold_keys(lkeys, 13)
-        if cfg.family == "moe":
-            h = moe.moe_ffn(layers.rms_norm(xc, lp["ln2"]), lp["ffn"], cfg,
-                            fkey)
-        else:
-            h = layers.mlp(layers.rms_norm(xc, lp["ln2"]), lp["ffn"], cfg,
-                           fkey)
-        return (xc + h, idx + 1), (kp, vp)
+    if cfg.family == "ssm":
+        ssm_cache = _reset_fresh_state(pages["ssm"], lengths)
 
-    (x, _), (k_new, v_new) = jax.lax.scan(
-        body, (x, 0), (params["blocks"], pages["k"], pages["v"]))
+        def sbody(carry, scanned):
+            xc, idx = carry
+            lp, lc = scanned
+            lkeys = layers.fold_keys(keys, idx)
+            h, nc = ssm.ssm_stream(layers.rms_norm(xc, lp["ln1"]),
+                                   lp["ssm"], cfg, lkeys, lc, valid)
+            return (xc + h, idx + 1), nc
+
+        (x, _), new_ssm = jax.lax.scan(
+            sbody, (x, 0), (params["blocks"], ssm_cache))
+        new_pages = {"ssm": new_ssm}
+    elif cfg.family == "hybrid":
+        ssm_cache = _reset_fresh_state(pages["ssm"], lengths)
+        ninv, per = n_shared_invocations(cfg), cfg.attn_every
+        grouped = _group(params["blocks"], ninv, per)
+        gcache = _group(ssm_cache, ninv, per)
+
+        def gbody(carry, scanned):
+            xc, idx = carry
+            gp, gc, kp, vp = scanned
+            new_ssm = []
+            for j in range(per):
+                lp = jax.tree.map(lambda v: v[j], gp)
+                lc = jax.tree.map(lambda v: v[j], gc)
+                lkeys = layers.fold_keys(keys, idx * per + j)
+                h, nc = ssm.ssm_stream(layers.rms_norm(xc, lp["ln1"]),
+                                       lp["ssm"], cfg, lkeys, lc, valid)
+                xc = xc + h
+                new_ssm.append(nc)
+            new_ssm = jax.tree.map(lambda *vs: jnp.stack(vs), *new_ssm)
+            k2 = layers.fold_keys(keys, 10_000 + idx)
+            h, kp, vp = attention.paged_attention_block(
+                layers.rms_norm(xc, params["shared"]["ln1"]),
+                params["shared"]["attn"], cfg, positions,
+                layers.fold_keys(k2, 17), kp, vp, block_table, lengths,
+                n_valid)
+            xc = xc + h
+            xc = xc + layers.mlp(
+                layers.rms_norm(xc, params["shared"]["ln2"]),
+                params["shared"]["mlp"], cfg, layers.fold_keys(k2, 19))
+            return (xc, idx + 1), (new_ssm, kp, vp)
+
+        (x, _), (ssm_g, k_new, v_new) = jax.lax.scan(
+            gbody, (x, 0), (grouped, gcache, pages["k"], pages["v"]))
+        n = n_backbone_layers(cfg)
+        new_pages = {"ssm": jax.tree.map(
+            lambda v: v.reshape((n,) + v.shape[2:]), ssm_g),
+            "k": k_new, "v": v_new}
+    else:
+        def body(carry, scanned):
+            xc, idx = carry
+            lp, kp, vp = scanned
+            lkeys = layers.fold_keys(keys, idx)
+            h, kp, vp = attention.paged_attention_block(
+                layers.rms_norm(xc, lp["ln1"]), lp["attn"], cfg, positions,
+                layers.fold_keys(lkeys, 11), kp, vp, block_table, lengths,
+                n_valid)
+            xc = xc + h
+            fkey = layers.fold_keys(lkeys, 13)
+            if cfg.family == "moe":
+                h = moe.moe_ffn(layers.rms_norm(xc, lp["ln2"]), lp["ffn"],
+                                cfg, fkey)
+            else:
+                h = layers.mlp(layers.rms_norm(xc, lp["ln2"]), lp["ffn"],
+                               cfg, fkey)
+            return (xc + h, idx + 1), (kp, vp)
+
+        (x, _), (k_new, v_new) = jax.lax.scan(
+            body, (x, 0), (params["blocks"], pages["k"], pages["v"]))
+        new_pages = {"k": k_new, "v": v_new}
+
     x = layers.rms_norm(x, params["final_norm"])
     if all_logits:
-        return _logits(x, params, cfg), {"k": k_new, "v": v_new}
+        return _logits(x, params, cfg, keys), new_pages
     last = jnp.maximum(n_valid - 1, 0)
     xl = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
-    logits = _logits(xl, params, cfg)
-    return logits, {"k": k_new, "v": v_new}
+    lkey = None
+    if keys is not None:
+        lkey = jnp.take_along_axis(
+            keys, last[:, None, None], axis=1)[:, 0]            # (b, 2)
+    logits = _logits(xl, params, cfg, lkey)
+    return logits, new_pages
 
 
 # --------------------------------------------------------------------------
@@ -443,7 +557,7 @@ def decode_step(params, cache, tokens, lengths, cfg, *, rng=None,
         new_cache = {"k": k_new, "v": v_new}
 
     x = layers.rms_norm(x, params["final_norm"])
-    logits = _logits(x[:, 0], params, cfg)
+    logits = _logits(x[:, 0], params, cfg, rng)
     return cst(logits, "batch", "vocab"), new_cache
 
 
@@ -458,7 +572,7 @@ def prefill(params, inputs, cfg, max_len: int, *, rng=None, constrain=None,
     lengths). inputs: (b, s) tokens or (b, s, d) embeddings; s <= max_len."""
     cst = constrain or (lambda v, *a: v)
     cstp = constrain_params or (lambda t: t)
-    x = _embed_inputs(params, inputs, cfg)
+    x = _embed_inputs(params, inputs, cfg, rng)
     b, s = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -524,6 +638,6 @@ def prefill(params, inputs, cfg, max_len: int, *, rng=None, constrain=None,
         cache = {"k": k_all, "v": v_all}
 
     x = layers.rms_norm(x, params["final_norm"])
-    logits = _logits(x[:, -1], params, cfg)
+    logits = _logits(x[:, -1], params, cfg, rng)
     lengths = jnp.full((b,), s, jnp.int32)
     return cst(logits, "batch", "vocab"), cache, lengths

@@ -49,14 +49,23 @@ def capacity(cfg, tokens_per_row: int) -> int:
 
 
 def moe_ffn(x, p, cfg, key=None, constrain=None):
-    """x: (b, s, d) -> (b, s, d). ``constrain(x, *logical_axes)`` optional."""
+    """x: (b, s, d) -> (b, s, d). ``constrain(x, *logical_axes)`` optional.
+
+    ``key`` is None (exact substrate), one raw (2,) key, or a per-token
+    (b, s, 2) key array (the paged engine's contract): per-token keys are
+    GATHERED through the same token->slot dispatch as ``x``, so a token's
+    expert matmuls draw from its own (request, position) key whatever
+    slot it lands in — MoE outputs stay invariant to batch composition,
+    chunking, and eviction/resume like every other site.
+    """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
     cap = capacity(cfg, s)
     cst = constrain or (lambda v, *a: v)
 
-    router_logits = jnp.dot(x.astype(jnp.float32),
-                            p["router"].astype(jnp.float32))   # (b, s, e)
+    router_logits = layers.dense(
+        x.astype(jnp.float32), p["router"].astype(jnp.float32), cfg,
+        layers.site_key(key, "moe_router"), site="moe_router")   # (b, s, e)
     probs = jax.nn.softmax(router_logits, axis=-1)
     gates, eidx = jax.lax.top_k(probs, k)                      # (b, s, k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
@@ -79,11 +88,21 @@ def moe_ffn(x, p, cfg, key=None, constrain=None):
     buf = buf[:, : e * cap].reshape(b, e, cap, d)
     buf = cst(buf, "batch", "experts", None, None)             # EP a2a here
 
-    # --- expert FFN (SwiGLU), experts sharded over `model` --------------
-    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(buf.dtype))
+    ekey = key
+    if key is not None and key.ndim == 3:
+        # per-token keys ride the SAME dispatch as x: gather by source
+        # token, scatter into capacity slots (empty slots keep zero keys;
+        # their x rows are zero so their outputs are zero regardless)
+        kg = jnp.take_along_axis(key, token[..., None], axis=1)
+        kbuf = jnp.zeros((b, e * cap + 1, 2), key.dtype)
+        kbuf = jax.vmap(lambda bf, sl, kv: bf.at[sl].set(kv))(kbuf, slot, kg)
+        ekey = kbuf[:, : e * cap].reshape(b, e, cap, 2)
+
+    # --- expert FFN (SwiGLU) through the substrate, per-expert keys -----
+    h = layers.expert_dense(buf, p["wi"], cfg, ekey, site="moe_wi")
     gate, up = jnp.split(h, 2, axis=-1)
     act = jax.nn.silu(gate.astype(jnp.float32)).astype(buf.dtype) * up
-    y = jnp.einsum("becf,efd->becd", act, p["wo"].astype(buf.dtype))
+    y = layers.expert_dense(act, p["wo"], cfg, ekey, site="moe_wo")
     y = cst(y, "batch", "experts", None, None)
 
     # --- combine: gather back per (token, k) slot, weight, scatter-add --

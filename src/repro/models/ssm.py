@@ -62,13 +62,23 @@ def _causal_conv(x, w, cache=None):
     return out, new_cache
 
 
-def _project(x, p, cfg):
-    z = layers.dense(x, p["wz"], cfg)
-    xin = layers.dense(x, p["wx"], cfg)
-    B = layers.dense(x, p["wB"], cfg)
-    C = layers.dense(x, p["wC"], cfg)
+def _project(x, p, cfg, key=None):
+    """Input/B/C/dt projections through the substrate, one site each.
+
+    ``key`` is None, a raw (2,) key, or per-token (b, s, 2) keys — each
+    projection folds its own site salt so the five draws are independent.
+    """
+    z = layers.dense(x, p["wz"], cfg, layers.site_key(key, "ssm_wz"),
+                     site="ssm_wz")
+    xin = layers.dense(x, p["wx"], cfg, layers.site_key(key, "ssm_wx"),
+                       site="ssm_wx")
+    B = layers.dense(x, p["wB"], cfg, layers.site_key(key, "ssm_wB"),
+                     site="ssm_wB")
+    C = layers.dense(x, p["wC"], cfg, layers.site_key(key, "ssm_wC"),
+                     site="ssm_wC")
     dt = jax.nn.softplus(
-        layers.dense(x, p["wdt"], cfg).astype(jnp.float32)
+        layers.dense(x, p["wdt"], cfg, layers.site_key(key, "ssm_wdt"),
+                     site="ssm_wdt").astype(jnp.float32)
         + p["dt_bias"].astype(jnp.float32))
     return z, xin, B, C, dt
 
@@ -149,7 +159,17 @@ def ssm_block(x, p, cfg, key=None, *, cache=None, constrain=None):
     cst = constrain or (lambda v_, *a: v_)
     b, s, _ = x.shape
     h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
-    z, xin, B, C, dt = _project(x, p, cfg)
+    if key is not None and key.ndim == 1 and s > 1:
+        # Chunked-pass key folding: one raw key fans out PER SSD CHUNK
+        # (position t draws from fold(key, t // ssm_chunk)), so the
+        # projections' stochastic draws align with the scan's chunk grid.
+        # Decode (s == 1) keeps the raw key — the engine already varies
+        # it per tick; per-token (b, s, 2) keys pass through untouched
+        # (the paged path folds per absolute position upstream).
+        ck = jnp.broadcast_to(jnp.arange(s)[None, :] // cfg.ssm_chunk,
+                              (b, s))
+        key = layers.fold_keys(jnp.broadcast_to(key, (b, s, 2)), ck)
+    z, xin, B, C, dt = _project(x, p, cfg, key)
     z = cst(z, "batch", "seq", "ssm_inner")
     xin = cst(xin, "batch", "seq", "ssm_inner")
     A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (h,) negative
@@ -196,8 +216,45 @@ def ssm_block(x, p, cfg, key=None, *, cache=None, constrain=None):
     y = cst(y, "batch", "seq", "ssm_inner")
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)   # gate
     y = layers.rms_norm(y, p["norm"])
-    okey = None if key is None else jax.random.fold_in(key, 3)
-    return layers.dense(y, p["out"], cfg, okey), new_cache
+    okey = layers.site_key(key, "ssm_out")
+    return layers.dense(y, p["out"], cfg, okey, site="ssm_out"), new_cache
+
+
+def ssm_stream(x, p, cfg, key, cache, valid):
+    """Chunk-width-invariant SSM feed for the paged engine.
+
+    Scans :func:`ssm_block`'s one-token recurrent update over the chunk
+    axis, merging the cache only at VALID positions — so a request's
+    state (and therefore its tokens) is bit-identical whether its
+    context arrives in one chunk, many chunks, or is replayed after an
+    eviction: token t's update is always the same FP op sequence
+    ``f(state_{t-1}, x_t)``, never a reassociated chunked scan.  Invalid
+    positions (chunk padding, idle rows) compute and discard — their
+    cache merge is a no-op, matching the null-block convention of
+    ``attention.paged_scatter``.
+
+    x: (b, sc, d); key: None or per-token (b, sc, 2); cache: the dict
+    of :func:`init_ssm_cache`; valid: (b, sc) bool.  Returns
+    (y (b, sc, d), new_cache).
+    """
+
+    def merge(v, new, old):
+        keep = v.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(keep, new, old)
+
+    def step(carry, inp):
+        xt, kt, vt = (inp if key is not None
+                      else (inp[0], None, inp[1]))   # (b,d), (b,2)|None, (b,)
+        yt, nc = ssm_block(xt[:, None], p, cfg, kt, cache=carry)
+        nc = jax.tree.map(lambda new, old: merge(vt, new, old), nc, carry)
+        return nc, yt[:, 0]
+
+    xs = ((jnp.moveaxis(x, 1, 0), jnp.moveaxis(valid, 1, 0))
+          if key is None else
+          (jnp.moveaxis(x, 1, 0), jnp.moveaxis(key, 1, 0),
+           jnp.moveaxis(valid, 1, 0)))
+    new_cache, y = jax.lax.scan(step, cache, xs)
+    return jnp.moveaxis(y, 0, 1), new_cache
 
 
 def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):

@@ -13,8 +13,8 @@ This is the ONE place float tensors become stochastic-computing operands:
 * fx16 bias words — the packed Pallas engine consumes biases as 16-bit
   fixed point (the Horner-ladder resolution in kernels/sc_mul.py).
 
-``core/scmac.py`` and ``kernels/ops.py`` used to each carry a copy of this
-logic; both now delegate here.
+The deleted PR-1 shims (``core/scmac.py``, ``kernels/ops.py``) used to
+each carry a copy of this logic; this module is the single home now.
 """
 
 from __future__ import annotations
@@ -28,8 +28,8 @@ FX16_ONE = 1 << 16      # fixed-point unit of the packed-engine bias words
 def encode(v, cfg):
     """float tensor -> (sign, probability, scale). p ∈ [0,1), v ≈ sign·p·scale.
 
-    ``cfg`` needs ``quantize`` and ``operand_bits`` (ScConfig or the legacy
-    SCMacConfig both qualify).
+    ``cfg`` needs ``quantize`` and ``operand_bits`` (any ScConfig-shaped
+    object qualifies).
 
     The operand grid is the paper's n-bit LUT index space (§III-A): an
     operand X ∈ [0, 2^n - 1] encodes probability X / 2^n, so the top

@@ -4,11 +4,14 @@ Two engines share this module (and the arch-trace lifecycle):
 
 * :class:`ServingEngine` — the original fixed-slot engine: contiguous
   full-``max_len`` KV rows, batch=1 admission prefill, lock-step decode.
-  Still the only engine for SSM/hybrid archs and mesh-sharded serving,
-  and the baseline the serve benchmark measures against.
+  Still the only engine for mesh-sharded serving, and the baseline the
+  serve benchmark measures against.
 * :class:`PagedServingEngine` — continuous batching over a block-pool
   paged KV cache with chunked prefill, eviction-on-OOM, and per-request
-  rng (see its docstring and ``docs/serving.md``).
+  rng, serving EVERY model family through a per-family cache plan
+  (``kv_cache.CachePlan``: paged KV for attention layers, fixed-size
+  SSM state slots for recurrent layers, both for hybrid — see its
+  docstring and ``docs/serving.md``).
 
 Fixed-slot engine
 -----------------
@@ -425,8 +428,19 @@ class PagedServingEngine(_ArchTracedEngine):
 
     ``step()`` is a thin loop over ``scheduler.Scheduler``: plan → one
     jitted call → sample the rows whose pending context emptied.
-    Attention families only (SSM state is O(1)/sequence — nothing to
-    page; the fixed-slot engine serves those).
+
+    Every model family serves here through a per-family cache plan
+    (``kv_cache.CachePlan``): attention families page their K/V; SSM
+    configs carry fixed-size state rows per batch slot beside the block
+    table (the allocator still meters the token budget, so admission /
+    chunked prefill / eviction-resume are family-agnostic — the
+    recurrent ``ssm_stream`` feed keeps tokens bit-invariant to batch
+    composition and chunking); hybrid configs carry both.  Two features
+    require RECONSTRUCTIBLE context and are therefore attention-only:
+    prefix caching (recurrent state cannot be spliced from adopted
+    blocks) and speculative decoding (the verify pass advances state
+    past rejected draft positions irreversibly) — both raise at
+    construction for state-carrying families.
     """
 
     def __init__(self, params, cfg, scfg: PagedServeConfig,
@@ -434,11 +448,18 @@ class PagedServingEngine(_ArchTracedEngine):
                  tracer=None):
         from repro.serve import kv_cache as kvc
         from repro.serve import scheduler as sched
-        if cfg.family in ("ssm", "hybrid"):
-            raise ValueError(
-                "PagedServingEngine needs an attention-family config "
-                f"(got family={cfg.family!r}); use ServingEngine for "
-                "ssm/hybrid archs")
+        self.cache_plan = kvc.CachePlan.for_config(cfg)
+        if self.cache_plan.has_state:
+            if scfg.prefix_cache:
+                raise ValueError(
+                    f"prefix_cache=True needs reconstructible context, but "
+                    f"family={cfg.family!r} carries recurrent SSM state — "
+                    "adopted KV blocks cannot rebuild a row's state")
+            if scfg.speculative:
+                raise ValueError(
+                    f"speculative=True cannot rewind recurrent state, but "
+                    f"family={cfg.family!r} carries SSM state — the verify "
+                    "pass would advance it past rejected draft tokens")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -459,7 +480,8 @@ class PagedServingEngine(_ArchTracedEngine):
                 f"{scfg.block_size}; need >= {1 + pcfg.blocks_per_seq}")
         self.kv = kvc.PagedKVCache(pcfg, metrics=self.metrics,
                                    enable_prefix_cache=scfg.prefix_cache)
-        self.pages = lm.init_paged_cache(cfg, num_blocks, scfg.block_size)
+        self.pages = lm.init_paged_cache(cfg, num_blocks, scfg.block_size,
+                                         slots=scfg.slots)
         self.scheduler = sched.Scheduler(
             scfg, self.kv, base_key=jax.random.PRNGKey(scfg.seed),
             on_finish=self._on_finish, metrics=self.metrics,

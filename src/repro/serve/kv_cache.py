@@ -86,6 +86,53 @@ class PagedCacheConfig:
         return (self.num_blocks - 1) * self.block_size
 
 
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    """Per-family device-cache layout — which layers page and which carry
+    fixed-size recurrent state.
+
+    The paged engine serves every model family through one plan:
+
+    * attention (dense/moe/audio/vlm): every backbone layer owns a paged
+      K/V pool; ``state_layers = 0``.
+    * ssm: K/V pools don't exist — each backbone layer carries one O(1)
+      state + conv-tail row PER BATCH ROW, indexed by slot (not by block
+      table).  The block allocator still meters the admission/eviction
+      token budget, so scheduling is family-agnostic; the tables simply
+      go unread by the model.  ``paged_layers = 0``.
+    * hybrid: both — state rows for the Mamba2 backbone layers plus K/V
+      pools for each weight-shared attention invocation.
+
+    ``models/lm.py:init_paged_cache`` materializes the device tensors
+    this plan describes; ``engine.PagedServingEngine`` consults
+    ``has_state`` to gate features that require reconstructible context
+    (prefix caching, speculative decoding — recurrent state cannot be
+    rewound or spliced from adopted blocks).
+    """
+
+    family: str
+    paged_layers: int           # layers with paged K/V pools
+    state_layers: int           # layers with fixed-size SSM state rows
+
+    @classmethod
+    def for_config(cls, cfg) -> "CachePlan":
+        from repro.models import lm
+        n = lm.n_backbone_layers(cfg)
+        if cfg.family == "ssm":
+            return cls(cfg.family, 0, n)
+        if cfg.family == "hybrid":
+            return cls(cfg.family, lm.n_shared_invocations(cfg), n)
+        return cls(cfg.family, n, 0)
+
+    @property
+    def has_paged(self) -> bool:
+        return self.paged_layers > 0
+
+    @property
+    def has_state(self) -> bool:
+        return self.state_layers > 0
+
+
 def blocks_for(tokens: int, block_size: int) -> int:
     """How many blocks a sequence of ``tokens`` tokens occupies."""
     return -(-tokens // block_size)

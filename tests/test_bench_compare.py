@@ -31,6 +31,7 @@ BASE = {
                              "serve_kv_blocks_free": 32}}},
     "paged_prefix": {"cache_hit_rate": 0.42, "tokens_per_s": 30.0},
     "paged_spec": {"accepted_per_step": 3.5, "acceptance_rate": 0.9},
+    "zoo": {"moe": {"moment": {"n64": {"logits_cos_acc": 0.93}}}},
 }
 
 
@@ -136,6 +137,28 @@ def test_rate_metrics_gate_tightly_but_allow_jitter():
     cur["paged_spec"]["accepted_per_step"] = 0.5       # drafts stopped landing
     errs = _errors(cur)
     assert len(errs) == 1 and "accepted_per_step" in errs[0]
+
+
+def test_acc_metrics_use_absolute_drop_band():
+    """`*_acc` accuracy leaves (zoo bench fidelity vs the exact
+    reference): sampling noise inside the absolute band passes, a real
+    accuracy collapse fails, improvements always pass, and the band has
+    its own --acc-tolerance knob."""
+    assert bench_compare.classify(
+        "zoo/moe/moment/n64/logits_cos_acc") == "acc"
+    cur = copy.deepcopy(BASE)
+    leaf = cur["zoo"]["moe"]["moment"]["n64"]
+    leaf["logits_cos_acc"] = 0.85                      # noise: fine
+    assert _errors(cur) == []
+    leaf["logits_cos_acc"] = 0.99                      # better: fine
+    assert _errors(cur) == []
+    leaf["logits_cos_acc"] = 0.4                       # estimator broke
+    errs = _errors(cur)
+    assert len(errs) == 1 and "logits_cos_acc" in errs[0]
+    assert "accuracy regression" in errs[0]
+    assert _errors(cur, acc_tolerance=0.6) == []       # its own knob
+    leaf["logits_cos_acc"] = 0.85
+    assert len(_errors(cur, acc_tolerance=0.05)) == 1
 
 
 def test_workload_config_is_compared_exactly():

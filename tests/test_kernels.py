@@ -7,9 +7,11 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.kernels import ops, ref
+from repro import sc
+from repro.kernels import ref
 from repro.kernels.sc_mac import sc_mac_fused
-from repro.kernels.sc_mul import NSLICES, sc_mul_popcount
+from repro.kernels.sc_mul import NSLICES, sc_mul_bitexact, sc_mul_popcount
+from repro.sc.encoding import to_fx16
 
 # ---------------------------------------------------------------------------
 # sc_mul: bit-exact against the oracle
@@ -21,8 +23,8 @@ from repro.kernels.sc_mul import NSLICES, sc_mul_popcount
 ])
 def test_sc_mul_kernel_matches_ref_exactly(key, m, w, block_m):
     kx, ky, kp = jax.random.split(key, 3)
-    px = ops.to_fx16(jax.random.uniform(kp, (m,)))
-    py = ops.to_fx16(jax.random.uniform(jax.random.fold_in(kp, 1), (m,)))
+    px = to_fx16(jax.random.uniform(kp, (m,)))
+    py = to_fx16(jax.random.uniform(jax.random.fold_in(kp, 1), (m,)))
     rx = jax.random.bits(kx, (m, NSLICES, w), jnp.uint32)
     ry = jax.random.bits(ky, (m, NSLICES, w), jnp.uint32)
     out_k = sc_mul_popcount(px, py, rx, ry, block_m=block_m, interpret=True)
@@ -37,7 +39,7 @@ def test_sc_mul_bias_edges(key):
     ry = jax.random.bits(jax.random.fold_in(key, 1), (m, NSLICES, w),
                          jnp.uint32)
     zeros = jnp.zeros((m,), jnp.uint32)
-    out = sc_mul_popcount(zeros, ops.to_fx16(jnp.ones(m) * 0.5), rx, ry,
+    out = sc_mul_popcount(zeros, to_fx16(jnp.ones(m) * 0.5), rx, ry,
                           block_m=8, interpret=True)
     assert int(jnp.sum(out)) == 0
 
@@ -50,15 +52,15 @@ def test_sc_mul_bernoulli_bias_is_correct(seed, p1, p2):
     resolution: pop-count fraction ~ p1*p2 within binomial noise."""
     key = jax.random.PRNGKey(seed)
     nbit = 32 * 64          # 2048 cells
-    est = ops.sc_mul_bitexact(
+    est = sc_mul_bitexact(
         key, jnp.array([p1]), jnp.array([p2]), nbit=nbit, block_m=8)
     sigma = np.sqrt(p1 * p2 * (1 - p1 * p2) / nbit)
     assert abs(float(est[0]) - p1 * p2) < 6 * sigma + 2e-4
 
 
 def test_sc_mul_wrapper_pads_irregular_batch(key):
-    est = ops.sc_mul_bitexact(key, jnp.full((5,), 0.5), jnp.full((5,), 0.5),
-                              nbit=256, block_m=8)
+    est = sc_mul_bitexact(key, jnp.full((5,), 0.5), jnp.full((5,), 0.5),
+                          nbit=256, block_m=8)
     assert est.shape == (5,)
 
 
@@ -102,29 +104,32 @@ def test_sc_mac_fused_dtype_sweep(key, dtype):
                                rtol=2e-2, atol=2e-2)
 
 
-def test_sc_matmul_fused_wrapper_irregular_shapes(key):
-    """ops wrapper pads to block multiples and un-pads the output."""
+def test_pallas_moment_backend_irregular_shapes(key):
+    """The pallas_moment backend pads to block multiples and un-pads the
+    output."""
     x = jax.random.normal(key, (100, 300))
     w = jax.random.normal(jax.random.fold_in(key, 1), (300, 50))
-    out = ops.sc_matmul_fused(jax.random.fold_in(key, 2), x, w, nbit=4096,
-                              block_m=64, block_n=64, block_k=128)
+    cfg = sc.ScConfig(backend="pallas_moment", nbit=4096,
+                      block_m=64, block_n=64, block_k=128)
+    out = sc.sc_dot(jax.random.fold_in(key, 2), x, w, cfg)
     assert out.shape == (100, 50)
     err = np.abs(np.asarray(out) - np.asarray(x @ w))
     scale = np.abs(np.asarray(x @ w)).max()
     assert err.mean() < 0.1 * scale
 
 
-def test_sc_matmul_fused_statistics_match_core(key):
-    """Fused kernel and core moment mode draw from the same distribution:
-    identical mean (exact product) and matching sigma."""
-    from repro.core import scmac
+def test_pallas_moment_statistics_match_array_level(key):
+    """Pallas moment kernel and the array-level moment backend draw from
+    the same distribution: identical mean (exact product) and matching
+    sigma."""
     x = jax.random.normal(key, (16, 128))
     w = jax.random.normal(jax.random.fold_in(key, 1), (128, 16))
     keys = jax.random.split(jax.random.fold_in(key, 2), 64)
-    fused = jax.vmap(lambda k_: ops.sc_matmul_fused(
-        k_, x, w, nbit=256, block_m=16, block_n=16, block_k=128))(keys)
-    core = jax.vmap(lambda k_: scmac.sc_matmul(
-        k_, x, w, scmac.SCMacConfig(mode="moment", nbit=256)))(keys)
+    pcfg = sc.ScConfig(backend="pallas_moment", nbit=256,
+                       block_m=16, block_n=16, block_k=128)
+    mcfg = sc.ScConfig(backend="moment", nbit=256)
+    fused = jax.vmap(lambda k_: sc.sc_dot(k_, x, w, pcfg))(keys)
+    core = jax.vmap(lambda k_: sc.sc_dot(k_, x, w, mcfg))(keys)
     np.testing.assert_allclose(np.asarray(fused.mean(0)),
                                np.asarray(core.mean(0)), atol=0.5)
     s_f = np.asarray(fused.std(0)).mean()

@@ -8,8 +8,7 @@ import pytest
 
 from repro import sc
 from repro.configs import get_smoke_config
-from repro.core import scmac
-from repro.kernels import ops
+from repro.kernels.sc_mul import sc_mul_bitexact
 from repro.models import layers, lm, params as P
 
 ALL_BACKENDS = ("exact", "moment", "bitexact", "pallas_moment",
@@ -125,21 +124,18 @@ def test_straight_through_gradients_at_dispatch_boundary(key, backend):
                                rtol=1e-4, atol=1e-4)
 
 
-def test_legacy_shims_route_through_registry(key):
-    """core.scmac and kernels.ops entry points are aliases of sc_dot —
-    identical draws per key."""
-    x, w = _xw(key, m=16, k=64, n=16)
-    legacy = scmac.sc_matmul(key, x, w,
-                             scmac.SCMacConfig(mode="moment", nbit=256))
-    new = sc.sc_dot(key, x, w, sc.ScConfig(backend="moment", nbit=256))
-    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(new))
-    legacy_f = ops.sc_matmul_fused(key, x, w, nbit=256, block_m=16,
-                                   block_n=16, block_k=64)
-    new_f = sc.sc_dot(key, x, w, sc.ScConfig(
-        backend="pallas_moment", nbit=256, block_m=16, block_n=16,
-        block_k=64))
-    np.testing.assert_allclose(np.asarray(legacy_f), np.asarray(new_f),
-                               rtol=1e-6, atol=1e-6)
+def test_packed_engine_agrees_with_bitexact_backend_stats(key):
+    """The raw packed-engine entry point (kernels.sc_mul.sc_mul_bitexact,
+    the survivor of the deleted ops.py shim) estimates the same products
+    the registry's bitexact backend builds its MACs from."""
+    probs = jnp.array([0.1, 0.25, 0.5, 0.7, 0.9, 0.33, 0.66, 0.05])
+    keys = jax.random.split(key, 64)
+    ests = jax.vmap(lambda k_: sc_mul_bitexact(
+        k_, probs, probs[::-1], nbit=2048))(keys)
+    true = np.asarray(probs * probs[::-1])
+    sigma = np.sqrt(true * (1 - true) / 2048)
+    np.testing.assert_allclose(np.asarray(ests.mean(0)), true,
+                               atol=5 * np.max(sigma) / np.sqrt(64) + 1e-3)
 
 
 def test_model_config_backend_aliasing():

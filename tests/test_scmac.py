@@ -1,4 +1,6 @@
-"""SC-MAC framework feature: modes, moments, signs, gradients."""
+"""SC substrate framework features through the public ``repro.sc`` API:
+backends, encoding, moments, gradients.  (Formerly exercised the
+``core/scmac`` shim; the shim is gone, the coverage stays.)"""
 
 import jax
 import jax.numpy as jnp
@@ -6,7 +8,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import scmac
+from repro import sc
 
 
 def _xw(key, m=32, k=128, n=16):
@@ -18,14 +20,14 @@ def _xw(key, m=32, k=128, n=16):
 
 def test_exact_mode_is_plain_matmul(key):
     x, w = _xw(key)
-    cfg = scmac.SCMacConfig(mode="exact")
-    out = scmac.sc_matmul(key, x, w, cfg)
+    cfg = sc.ScConfig(backend="exact")
+    out = sc.sc_dot(key, x, w, cfg)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x @ w), rtol=1e-5)
 
 
 def test_encode_reconstructs_input(key):
     v = jax.random.normal(key, (64, 64)) * 3.0
-    s, p, scale = scmac.encode(v, scmac.SCMacConfig(quantize=False))
+    s, p, scale = sc.encoding.encode(v, sc.ScConfig(quantize=False))
     np.testing.assert_allclose(np.asarray(s * p * scale), np.asarray(v),
                                rtol=1e-5, atol=1e-6)
     assert float(p.max()) <= 1.0 and float(p.min()) >= 0.0
@@ -33,20 +35,20 @@ def test_encode_reconstructs_input(key):
 
 def test_encode_quantizes_to_operand_grid(key):
     v = jax.random.normal(key, (64,))
-    cfg = scmac.SCMacConfig(operand_bits=10)
-    _, p, _ = scmac.encode(v, cfg)
+    cfg = sc.ScConfig(operand_bits=10)
+    _, p, _ = sc.encoding.encode(v, cfg)
     grid = np.asarray(p) * 1024
     np.testing.assert_allclose(grid, np.round(grid), atol=1e-4)
 
 
-@pytest.mark.parametrize("mode", ["bitexact", "moment"])
-def test_stochastic_modes_unbiased(key, mode):
-    """Both SC modes estimate x@w with zero-centered error (Fig. 7a lifted
-    to the MAC level)."""
+@pytest.mark.parametrize("backend", ["bitexact", "moment"])
+def test_stochastic_backends_unbiased(key, backend):
+    """Both SC backends estimate x@w with zero-centered error (Fig. 7a
+    lifted to the MAC level)."""
     x, w = _xw(key, m=16, k=256, n=8)
-    cfg = scmac.SCMacConfig(mode=mode, nbit=1024)
+    cfg = sc.ScConfig(backend=backend, nbit=1024)
     outs = jax.vmap(
-        lambda k_: scmac.sc_matmul(k_, x, w, cfg))(jax.random.split(key, 64))
+        lambda k_: sc.sc_dot(k_, x, w, cfg))(jax.random.split(key, 64))
     mean = np.asarray(outs.mean(axis=0))
     exact = np.asarray(x @ w)
     resid = np.abs(mean - exact)
@@ -57,15 +59,15 @@ def test_stochastic_modes_unbiased(key, mode):
 
 
 def test_moment_matches_bitexact_variance(key):
-    """The beyond-paper moment mode must reproduce the bitexact variance
-    (that is its contract: identical first/second moments)."""
+    """The beyond-paper moment backend must reproduce the bitexact
+    variance (that is its contract: identical first/second moments)."""
     x, w = _xw(key, m=8, k=128, n=4)
     keys = jax.random.split(key, 128)
     var = {}
-    for mode in ("bitexact", "moment"):
-        cfg = scmac.SCMacConfig(mode=mode, nbit=256)
-        outs = jax.vmap(lambda k_: scmac.sc_matmul(k_, x, w, cfg))(keys)
-        var[mode] = np.asarray(outs.std(axis=0))
+    for backend in ("bitexact", "moment"):
+        cfg = sc.ScConfig(backend=backend, nbit=256)
+        outs = jax.vmap(lambda k_: sc.sc_dot(k_, x, w, cfg))(keys)
+        var[backend] = np.asarray(outs.std(axis=0))
     ratio = var["moment"] / np.maximum(var["bitexact"], 1e-9)
     # elementwise sigmas agree within sampling slack
     assert 0.7 < np.median(ratio) < 1.4
@@ -76,39 +78,42 @@ def test_variance_shrinks_with_nbit(key):
     keys = jax.random.split(key, 96)
     sig = {}
     for nbit in (256, 4096):
-        cfg = scmac.SCMacConfig(mode="moment", nbit=nbit)
-        outs = jax.vmap(lambda k_: scmac.sc_matmul(k_, x, w, cfg))(keys)
+        cfg = sc.ScConfig(backend="moment", nbit=nbit)
+        outs = jax.vmap(lambda k_: sc.sc_dot(k_, x, w, cfg))(keys)
         sig[nbit] = float(np.asarray(outs.std(axis=0)).mean())
     assert sig[4096] < sig[256] / 2.5  # expect ~4x
 
 
 def test_straight_through_gradients_match_exact(key):
     x, w = _xw(key, m=8, k=32, n=4)
-    cfg = scmac.SCMacConfig(mode="moment", nbit=1024)
+    cfg = sc.ScConfig(backend="moment", nbit=1024)
 
     def loss_sc(x_, w_):
-        return jnp.sum(scmac.sc_matmul(key, x_, w_, cfg) ** 2)
+        return jnp.sum(sc.sc_dot(key, x_, w_, cfg) ** 2)
 
     # STE backward: d/dx sum(f(x@w)^2) evaluated with the *stochastic*
     # forward value but exact-product jacobian
     gx, gw = jax.grad(loss_sc, argnums=(0, 1))(x, w)
-    y = scmac.sc_matmul(key, x, w, cfg)
+    y = sc.sc_dot(key, x, w, cfg)
     np.testing.assert_allclose(np.asarray(gx), np.asarray(2 * (y @ w.T)),
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(gw), np.asarray(2 * (x.T @ y)),
                                rtol=1e-4, atol=1e-4)
 
 
-def test_sc_einsum_bld_df_shape(key):
+def test_sc_dot_batched_lead_dims_shape(key):
+    """(b, l, d) x (d, f) flattens the lead dims through the backend and
+    restores them — the shape contract models/layers.dense leans on."""
     x = jax.random.normal(key, (2, 6, 32))
     w = jax.random.normal(key, (32, 16))
-    y = scmac.sc_einsum_bld_df(key, x, w, scmac.SCMacConfig(mode="moment"))
+    y = sc.sc_dot(key, x, w, sc.ScConfig(backend="moment"))
     assert y.shape == (2, 6, 16)
 
 
-def test_unknown_mode_rejected():
-    with pytest.raises(ValueError):
-        scmac.SCMacConfig(mode="bogus")
+def test_unknown_backend_rejected(key):
+    x, w = _xw(key, m=4, k=8, n=2)
+    with pytest.raises(ValueError, match="unknown SC backend"):
+        sc.sc_dot(key, x, w, sc.ScConfig(backend="bogus"))
 
 
 @given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 1e3))
@@ -118,8 +123,8 @@ def test_scale_invariance(seed, scale):
     inputs scales the output by the same factor (same key => same draw)."""
     key = jax.random.PRNGKey(seed)
     x, w = _xw(key, m=4, k=32, n=4)
-    cfg = scmac.SCMacConfig(mode="moment", nbit=512, quantize=False)
-    base = scmac.sc_matmul(key, x, w, cfg)
-    scaled = scmac.sc_matmul(key, x * scale, w, cfg)
+    cfg = sc.ScConfig(backend="moment", nbit=512, quantize=False)
+    base = sc.sc_dot(key, x, w, cfg)
+    scaled = sc.sc_dot(key, x * scale, w, cfg)
     np.testing.assert_allclose(np.asarray(scaled), np.asarray(base) * scale,
                                rtol=2e-3, atol=1e-5 * scale)

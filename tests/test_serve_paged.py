@@ -165,12 +165,18 @@ def test_chunked_prefill_matches_one_shot(key):
                                    rtol=1e-5, atol=1e-5)
 
 
-def test_decode_paged_rejects_ssm_family():
+def test_ssm_family_cache_plan_requirements():
     cfg = _cfg("mamba2-370m")
-    with pytest.raises(ValueError):
+    # state-carrying families need slots= (fixed-size rows, not blocks)
+    with pytest.raises(ValueError, match="slots"):
         lm.init_paged_cache(cfg, 8, 4)
-    with pytest.raises(ValueError):
-        PagedServingEngine({}, cfg, PagedServeConfig())
+    pages = lm.init_paged_cache(cfg, 8, 4, slots=2)
+    assert set(pages) == {"ssm"}
+    # features needing reconstructible context raise at construction
+    with pytest.raises(ValueError, match="prefix_cache"):
+        PagedServingEngine({}, cfg, PagedServeConfig(prefix_cache=True))
+    with pytest.raises(ValueError, match="speculative"):
+        PagedServingEngine({}, cfg, PagedServeConfig(speculative=True))
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,15 @@ Per-metric tolerance classes (suffix-matched on the leaf key):
                             ``--rate-floor``x baseline (default 0.9x —
                             these are workload-determined, not
                             wall-clock-paced, so the floor is tight);
+* ``*_acc``               — accuracy metrics on a [0, 1]-ish scale
+                            (cosine / agreement vs the exact reference,
+                            e.g. the zoo bench's stochastic-forward
+                            fidelity): higher is better, fail when the
+                            fresh value drops more than
+                            ``--acc-tolerance`` *below* the baseline
+                            (absolute, default 0.15 — covers sampling
+                            noise between runs without letting a backend
+                            quietly stop estimating the product);
 * ``generated_tokens`` / ``ticks`` / ``evictions`` — scheduling counts
                             driven by real time (the serve bench paces
                             arrivals with the wall clock), so they get
@@ -72,6 +81,7 @@ WALL_TOLERANCE = 20.0  # x baseline for *_us / *_s metrics
 LATENCY_TOLERANCE = 20.0  # x baseline for *_ms latency metrics
 RATIO_FLOOR = 0.1  # x baseline for speedup / throughput metrics
 RATE_FLOOR = 0.9  # x baseline for hit-rate / acceptance-rate metrics
+ACC_TOLERANCE = 0.15  # absolute allowed drop for *_acc accuracy metrics
 COUNT_SLACK = 5.0  # additive slack for scheduler counts (0 baselines)
 EXACT_RTOL = 1e-6  # float round-off for deterministic metrics
 
@@ -96,6 +106,8 @@ def classify(path: str) -> str:
         return "gauge"
     if key.endswith("_rate") or key in _RATE_KEYS:
         return "rate"
+    if key.endswith("_acc"):
+        return "acc"
     if key.endswith("_total") or key.endswith("_count"):
         return "counter"
     if "speedup" in key or key.endswith("tokens_per_s"):
@@ -124,7 +136,8 @@ def _leaves(payload, prefix=""):
 
 
 def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor,
-                latency_tolerance, rate_floor=RATE_FLOOR):
+                latency_tolerance, rate_floor=RATE_FLOOR,
+                acc_tolerance=ACC_TOLERANCE):
     rule = classify(path)
     if rule == "ignore":
         return None
@@ -182,6 +195,15 @@ def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor,
                 f"{path}: {cur:g} fell below {rate_floor:g}x the "
                 f"baseline {base:g} (cache-sharing/acceptance regression)"
             )
+    elif rule == "acc":
+        # accuracy vs the exact reference: an absolute-drop gate (these
+        # live near 1.0, so a multiplicative floor would be either
+        # toothless or noise-triggered); improvements always pass
+        if cur < base - acc_tolerance:
+            return (
+                f"{path}: {cur:g} dropped more than {acc_tolerance:g} "
+                f"below the baseline {base:g} (accuracy regression)"
+            )
     elif rule == "count":
         # wall-clock-paced counts: only an upward blowup is a regression
         # (runner speed legitimately moves these in both directions)
@@ -210,6 +232,7 @@ def compare_payloads(
     ratio_floor=RATIO_FLOOR,
     latency_tolerance=LATENCY_TOLERANCE,
     rate_floor=RATE_FLOOR,
+    acc_tolerance=ACC_TOLERANCE,
     check_gauges=False,
 ):
     """Every regression of ``current`` against ``baseline`` (else []).
@@ -238,6 +261,7 @@ def compare_payloads(
             ratio_floor=ratio_floor,
             latency_tolerance=latency_tolerance,
             rate_floor=rate_floor,
+            acc_tolerance=acc_tolerance,
         )
         if err:
             errors.append(f"{name}:{err}")
@@ -258,6 +282,10 @@ def main(argv=None) -> int:
     ap.add_argument("--wall-tolerance", type=float, default=WALL_TOLERANCE)
     ap.add_argument("--ratio-floor", type=float, default=RATIO_FLOOR)
     ap.add_argument("--rate-floor", type=float, default=RATE_FLOOR)
+    ap.add_argument(
+        "--acc-tolerance", type=float, default=ACC_TOLERANCE,
+        help="absolute drop below baseline tolerated for *_acc metrics"
+    )
     ap.add_argument(
         "--latency-tolerance", type=float, default=LATENCY_TOLERANCE
     )
@@ -312,6 +340,7 @@ def main(argv=None) -> int:
             ratio_floor=args.ratio_floor,
             latency_tolerance=args.latency_tolerance,
             rate_floor=args.rate_floor,
+            acc_tolerance=args.acc_tolerance,
             check_gauges=args.check_gauges,
         )
         n_metrics = len(_leaves(baseline))

@@ -27,10 +27,11 @@ FENCE_RE = re.compile(r"^```(\w*)\s*$")
 # Files whose links are checked.
 LINK_FILES = ["README.md", "docs/paper_map.md", "docs/backends.md",
               "docs/scaling.md", "docs/serving.md", "docs/kernels.md",
-              "docs/observability.md", "docs/prefix_caching.md"]
+              "docs/observability.md", "docs/prefix_caching.md",
+              "docs/model_zoo.md"]
 # Files whose ```python blocks are executed.
 SNIPPET_FILES = ["docs/backends.md", "docs/scaling.md",
-                 "docs/prefix_caching.md"]
+                 "docs/prefix_caching.md", "docs/model_zoo.md"]
 
 
 def check_links(relpath: str) -> list[str]:
