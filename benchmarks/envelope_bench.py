@@ -1,0 +1,172 @@
+"""Reliability envelope: accuracy as a function of device badness.
+
+Sweeps the three device-realism axes a :class:`repro.core.physics.
+DeviceProfile` exposes — manufacturing spread ``sigma``, bit-error rate
+``ber``, and stochastic length ``nbit`` — and records how far each point
+pushes the substrate off the paper's idealized math:
+
+* **MUL envelope** (fig7/fig8-style): batched single MULs on the frozen
+  variation maps, emitting error sigma and mean bias per (nbit, sigma).
+* **Dot envelope**: small matmuls through the ``array`` backend with the
+  full profile (variation + stuck-at + retention), emitting cosine
+  accuracy vs the exact product per (sigma, ber) — plus the EXACT
+  modeled fault census (``accounting.bit_error_census``) for that call,
+  the ``*_errors_total`` leaves CI gates bit-for-bit.
+
+All draws come from fixed PRNG keys and frozen Threefry maps, so every
+leaf is deterministic; ``tools/bench_compare.py`` compares sigma/bias
+exactly, ``cos_acc`` under the accuracy tolerance, and the censuses
+under the dedicated ``errors`` class.  ``--tiny`` shrinks the grid for
+CI; the committed baseline (``benchmarks/baselines/BENCH_envelope.json``)
+is a ``--tiny`` artifact.
+
+    PYTHONPATH=src:. python benchmarks/envelope_bench.py --tiny
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, section, write_json
+from repro import sc
+from repro.arch import accounting
+from repro.core import engine, physics
+
+TAU_X, TAU_Y = 0.3, 0.4
+SEED = 7
+MAP_CELLS = 1 << 14      # small frozen map -> fast census, full wraparound
+
+# Full grid (local runs) vs --tiny (CI; the committed baseline).
+GRID = dict(
+    full=dict(sigmas=(0.0, 0.02, 0.05, 0.10), bers=(0.0, 1e-3, 5e-3),
+              nbits=(256, 1024, 4096), iters=600, dot_nbit=1024),
+    tiny=dict(sigmas=(0.0, 0.05), bers=(0.0, 2e-3),
+              nbits=(256,), iters=200, dot_nbit=256),
+)
+
+
+def make_profile(sigma: float, ber: float) -> physics.DeviceProfile:
+    """One envelope grid point: spread ``sigma`` lands on Delta (and half
+    of it on I_c, matching the calibrated profile's ratio); ``ber``
+    splits across the fault taxonomy (stuck-at symmetric, retention 5x
+    rarer, matching the named profiles)."""
+    return physics.DeviceProfile(
+        sigma_delta=sigma, sigma_ic=0.5 * sigma,
+        ber_stuck0=ber, ber_stuck1=ber, ber_retention=0.2 * ber,
+        seed=SEED, map_cells=MAP_CELLS)
+
+
+def mul_envelope(key, nbits, sigmas, iters: int) -> dict:
+    """Fig7-style accuracy x fig8-style variance on the MUL engine:
+    ``iters`` batched MULs per grid point, each on its own cell bank of
+    the profile's frozen map."""
+    out = {}
+    p_true = float(np.exp(-(TAU_X + TAU_Y)))
+    for i, nbit in enumerate(nbits):
+        cfg = engine.EngineConfig(nbit=nbit)
+        row = {}
+        for j, s in enumerate(sigmas):
+            prof = make_profile(s, 0.0)
+            k = jax.random.fold_in(key, i * 97 + j)
+            tau_x = jnp.full((iters,), TAU_X)
+            p = engine.readout(engine.sc_multiply_states(
+                k, tau_x, TAU_Y, cfg, profile=prof))
+            err = np.asarray(p) - p_true
+            cell = {"sigma_pct": round(float(err.std()) * 100, 3),
+                    "bias_pct": round(float(err.mean()) * 100, 3)}
+            emit(f"envelope.mul.nbit{nbit}.sigma{s}.sigma_pct",
+                 cell["sigma_pct"],
+                 "expect ~1/sqrt(nbit), ~flat in sigma (fig8)")
+            emit(f"envelope.mul.nbit{nbit}.sigma{s}.bias_pct",
+                 cell["bias_pct"], "variation-induced bias")
+            row[f"sigma{s}"] = cell
+        out[f"nbit{nbit}"] = row
+    return out
+
+
+def dot_envelope(key, sigmas, bers, nbit: int) -> dict:
+    """Accuracy of a small matmul through the ``array`` backend under the
+    full fault taxonomy, with the exact modeled error census per point."""
+    m, kdim, n = 4, 16, 4
+    kx, kw, kd = jax.random.split(key, 3)
+    x = jax.random.uniform(kx, (m, kdim), minval=-1.0, maxval=1.0)
+    w = jax.random.uniform(kw, (kdim, n), minval=-1.0, maxval=1.0)
+    y_ref = np.asarray(x @ w).ravel()
+    cells = m * kdim * n * nbit
+    out = {"workload": {"shape": [m, kdim, n], "nbit": nbit,
+                        "cells": cells}}
+    for i, s in enumerate(sigmas):
+        for j, b in enumerate(bers):
+            prof = make_profile(s, b)
+            cfg = sc.ScConfig(backend="array", nbit=nbit, device=prof)
+            y = np.asarray(sc.sc_dot(jax.random.fold_in(kd, i * 31 + j),
+                                     x, w, cfg)).ravel()
+            cos = float(np.dot(y, y_ref)
+                        / max(np.linalg.norm(y) * np.linalg.norm(y_ref),
+                              1e-12))
+            census = accounting.bit_error_census(prof, cells)
+            cell = {
+                "cos_acc": round(cos, 3),
+                "stuck0_errors_total": census["stuck0"],
+                "stuck1_errors_total": census["stuck1"],
+                "retention_errors_total": census["retention"],
+            }
+            emit(f"envelope.dot.sigma{s}.ber{b}.cos_acc", cell["cos_acc"],
+                 "cosine vs exact product")
+            emit(f"envelope.dot.sigma{s}.ber{b}.errors_total",
+                 census["stuck0"] + census["stuck1"] + census["retention"],
+                 "exact modeled fault census (bit_error_census)")
+            out[f"sigma{s}_ber{b}"] = cell
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized grid (the committed baseline)")
+    ap.add_argument("--json-out", default="BENCH_envelope.json",
+                    metavar="PATH")
+    args = ap.parse_args(argv)
+    g = GRID["tiny" if args.tiny else "full"]
+    key = jax.random.PRNGKey(SEED)
+
+    section(f"MUL envelope: sigma x nbit ({'tiny' if args.tiny else 'full'}"
+            f" grid, {g['iters']} MULs/point)")
+    mul = mul_envelope(jax.random.fold_in(key, 0), g["nbits"], g["sigmas"],
+                       g["iters"])
+
+    section(f"Dot envelope: sigma x ber through the array backend "
+            f"(nbit={g['dot_nbit']})")
+    dot = dot_envelope(jax.random.fold_in(key, 1), g["sigmas"], g["bers"],
+                       g["dot_nbit"])
+
+    # Headline: how much the worst grid point degrades vs the ideal one.
+    nb = f"nbit{g['nbits'][0]}"
+    s_lo = mul[nb][f"sigma{g['sigmas'][0]}"]["sigma_pct"]
+    s_hi = mul[nb][f"sigma{g['sigmas'][-1]}"]["sigma_pct"]
+    worst_cos = min(v["cos_acc"] for kk, v in dot.items()
+                    if kk != "workload")
+    headline = {
+        "sigma_inflation": round(s_hi / max(s_lo, 1e-9), 3),
+        "worst_cos_acc": worst_cos,
+    }
+    section("Headline")
+    emit("envelope.sigma_inflation", headline["sigma_inflation"],
+         "sigma(worst spread)/sigma(ideal) at smallest nbit — paper: ~flat")
+    emit("envelope.worst_cos_acc", headline["worst_cos_acc"],
+         "accuracy floor across the swept envelope")
+
+    write_json(args.json_out, {
+        "tiny": bool(args.tiny),
+        "headline": headline,
+        "mul": mul,
+        "dot": dot,
+    })
+
+
+if __name__ == "__main__":
+    main()

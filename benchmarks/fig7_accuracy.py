@@ -3,26 +3,37 @@ Gaussian, zero-centered, sigma ~ 1.6 %); (b) sigma vs nbit and vs tau_Y."""
 
 from __future__ import annotations
 
+import argparse
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bar, emit, section
-from repro.core import engine
+from repro.core import engine, physics
 
 TAU_X, TAU_Y = 0.3, 0.4
 ITERS = 1000
 
 
-def _sigma(key, nbit: int, tau_y: float = TAU_Y, iters: int = ITERS):
+def _sigma(key, nbit: int, tau_y: float = TAU_Y, iters: int = ITERS,
+           profile: physics.DeviceProfile | None = None):
     cfg = engine.EngineConfig(nbit=nbit)
+    if profile is not None:
+        # Batch the iterations so each one runs on its OWN cell bank of
+        # the profile's frozen variation map (vmapped per-key MULs would
+        # all read cells 0..nbit-1).
+        tau_x = jnp.full((iters,), TAU_X)
+        return engine.readout(engine.sc_multiply_states(
+            key, tau_x, tau_y, cfg, profile=profile))
     keys = jax.random.split(key, iters)
-    p = jax.vmap(lambda k: engine.readout(
+    return jax.vmap(lambda k: engine.readout(
         engine.sc_multiply_states(k, TAU_X, tau_y, cfg)))(keys)
-    return p
 
 
-def main(key=None):
+def main(key=None, profile=None):
     key = key if key is not None else jax.random.PRNGKey(42)
+    profile = physics.resolve_profile(profile)
 
     section("Fig 7a: error distribution, nbit=1000, tau_X=0.3ns tau_Y=0.4ns")
     p = _sigma(key, 1000)
@@ -54,6 +65,19 @@ def main(key=None):
                                     tau_y, iters=600)).std())
         emit(f"fig7b.sigma_pct.tau_y={tau_y}", round(s * 100, 3), "")
 
+    if profile is not None:
+        section("Fig 7a on a realized device (DeviceProfile)")
+        pd = np.asarray(_sigma(jax.random.fold_in(key, 999), 1000,
+                               profile=profile))
+        errd = pd - p_true
+        emit("fig7a.device_sigma_pct", round(float(errd.std()) * 100, 3),
+             f"sigma_delta={profile.sigma_delta} sigma_ic={profile.sigma_ic}")
+        emit("fig7a.device_mean_bias_pct",
+             round(float(errd.mean()) * 100, 4), "variation-induced bias")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default=None,
+                    help="named DeviceProfile (see core/physics.py)")
+    main(profile=ap.parse_args().profile)

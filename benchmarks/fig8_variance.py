@@ -7,11 +7,13 @@
 
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, section
-from repro.core import engine, variance
+from repro.core import engine, physics, variance
 
 X, Y = 400, 700
 CFG = engine.EngineConfig(nbit=1024)
@@ -27,12 +29,25 @@ def _sweep(key, fn, sigmas):
     return out
 
 
-def main(key=None):
-    key = key if key is not None else jax.random.PRNGKey(7)
+def _profile_sweep(key, sigmas, base: physics.DeviceProfile):
+    """sigma(I_c) sweep through the DeviceProfile path: each sigma is a
+    frozen realized map, each iteration its own MUL cell bank."""
+    out = {}
+    x = jnp.full((ITERS,), X, jnp.int32)
+    for i, s in enumerate(sigmas):
+        p = variance.sc_mul_with_profile(
+            jax.random.fold_in(key, i), x, Y, CFG,
+            base.replace(sigma_ic=s))
+        out[s] = float(jnp.std(p))
+    return out
 
-    section("Fig 8a: sigma(MUL) vs sigma(I_c) — SC+PIM")
-    ic = _sweep(key, lambda k, s: variance.sc_mul_with_ic_variance(
-        k, X, Y, CFG, s), (0.0, 0.02, 0.04, 0.06, 0.08, 0.10))
+
+def main(key=None, profile=None):
+    key = key if key is not None else jax.random.PRNGKey(7)
+    base = physics.resolve_profile(profile) or physics.DeviceProfile()
+
+    section("Fig 8a: sigma(MUL) vs sigma(I_c) — SC+PIM (realized maps)")
+    ic = _profile_sweep(key, (0.0, 0.02, 0.04, 0.06, 0.08, 0.10), base)
     for s, v in ic.items():
         emit(f"fig8a.sigma_pct.ic={int(s * 100)}%", round(v * 100, 3),
              "paper: ~flat")
@@ -55,4 +70,8 @@ def main(key=None):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default=None,
+                    help="base DeviceProfile name the sigma(I_c) sweep "
+                         "perturbs (see core/physics.py)")
+    main(profile=ap.parse_args().profile)

@@ -49,8 +49,7 @@ import numpy as np
 from benchmarks.common import emit, section, write_json
 from repro.configs import get_smoke_config
 from repro.models import lm, params as params_lib
-from repro.serve import (PagedServeConfig, PagedServingEngine, Request,
-                         ServeConfig, ServingEngine)
+from repro.serve import Request, ServeOptions, build_engine
 
 
 def build_workload(n_requests: int, vocab: int, *, seed: int,
@@ -179,15 +178,17 @@ def main(argv=None):
             f"{prompt_range}, outputs {newtok_range}, slots={args.slots}, "
             f"sc={args.sc_backend}")
 
-    fixed = ServingEngine(params, cfg, ServeConfig(
-        slots=args.slots, max_len=max_len, seed=args.seed))
+    base_opts = ServeOptions(slots=args.slots, max_len=max_len,
+                             seed=args.seed)
+    paged_opts = base_opts.replace(paged=True, block_size=8,
+                                   prefill_chunk=chunk)
+
+    fixed = build_engine(params, cfg, base_opts)
     fixed_stats = drive(fixed, specs, arrivals)
     fixed.close()
     emit("fixed_slot.tokens_per_s", fixed_stats["tokens_per_s"])
 
-    paged = PagedServingEngine(params, cfg, PagedServeConfig(
-        slots=args.slots, max_len=max_len, seed=args.seed,
-        block_size=8, prefill_chunk=chunk))
+    paged = build_engine(params, cfg, paged_opts)
     paged_stats = drive(paged, specs, arrivals)
     paged_stats["ticks"], paged_stats["evictions"] = _registry_ticks(paged)
     paged_stats.update(paged.decode_latency_ms() or {})
@@ -195,10 +196,8 @@ def main(argv=None):
     paged.close()
     emit("paged.tokens_per_s", paged_stats["tokens_per_s"])
 
-    fused = PagedServingEngine(
-        params, cfg.replace(paged_attn="fused"), PagedServeConfig(
-            slots=args.slots, max_len=max_len, seed=args.seed,
-            block_size=8, prefill_chunk=chunk))
+    fused = build_engine(params, cfg,
+                         paged_opts.replace(fused_attention=True))
     fused_stats = drive(fused, specs, arrivals)
     fused_stats["ticks"], fused_stats["evictions"] = _registry_ticks(fused)
     fused_stats.update(fused.decode_latency_ms() or {})
@@ -254,9 +253,7 @@ def main(argv=None):
             f"{shared_len}-token system prompt")
 
     def _prefix_engine(**kw):
-        return PagedServingEngine(params, cfg, PagedServeConfig(
-            slots=args.slots, max_len=max_len, seed=args.seed,
-            block_size=8, prefill_chunk=chunk, **kw))
+        return build_engine(params, cfg, paged_opts.replace(**kw))
 
     base = _prefix_engine(rng_mode="content")
     base_stats = drive(base, pre_specs, zeros)

@@ -34,8 +34,7 @@ import numpy as np
 from benchmarks.common import emit, section, timed, write_json
 from repro.models import lm, params as params_lib
 from repro.configs import get_smoke_config
-from repro.serve import (PagedServeConfig, PagedServingEngine, Request,
-                         ServeConfig, ServingEngine)
+from repro.serve import Request, ServeOptions, build_engine
 from repro.serve.kv_cache import CachePlan
 
 # one representative arch per cache-plan family; musicgen covers the
@@ -150,12 +149,12 @@ def _decode_check(family, params, cfg0, key):
     stochastic substrates are paged-vs-paged, pinned in
     tests/test_serve_zoo.py), plus a moment-substrate paged drain."""
     prompt = [5, 9, 17, 3, 8]
-    pcfg = dict(slots=1, max_len=32, block_size=4, prefill_chunk=3)
+    popts = ServeOptions(paged=True, slots=1, max_len=32, block_size=4,
+                         prefill_chunk=3)
     cfg = cfg0.replace(sc_backend="exact")
-    want = _drain(ServingEngine(params, cfg,
-                                ServeConfig(slots=1, max_len=32)), prompt)
-    got = _drain(PagedServingEngine(params, cfg, PagedServeConfig(**pcfg)),
-                 prompt)
+    want = _drain(build_engine(params, cfg,
+                               ServeOptions(slots=1, max_len=32)), prompt)
+    got = _drain(build_engine(params, cfg, popts), prompt)
     ok = got == want
     plan = CachePlan.for_config(cfg)
     emit(f"zoo.{family}.paged_matches_fixed", int(ok),
@@ -164,8 +163,7 @@ def _decode_check(family, params, cfg0, key):
     assert ok, (f"{family}: paged tokens {got} != fixed-slot {want} — "
                 "the cache plan broke token identity")
     mcfg = cfg0.replace(sc_backend="moment", sc_nbit=64)
-    stoch = _drain(PagedServingEngine(params, mcfg,
-                                      PagedServeConfig(**pcfg)), prompt)
+    stoch = _drain(build_engine(params, mcfg, popts), prompt)
     emit(f"zoo.{family}.stochastic_decode_ok", int(len(stoch) == 4),
          "moment-substrate paged drain")
     return {"paged_matches_fixed": ok,

@@ -21,8 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import lm, params as params_lib
-from repro.serve import (PagedServeConfig, PagedServingEngine, Request,
-                         ServeConfig, ServingEngine)
+from repro.serve import Request, ServeOptions, build_engine
 
 
 def main():
@@ -63,14 +62,10 @@ def main():
     key = jax.random.PRNGKey(0)
     params = params_lib.init_params(key, lm.lm_param_specs(cfg),
                                     cfg.param_dtype)
-    if args.paged:
-        engine = PagedServingEngine(params, cfg, PagedServeConfig(
-            slots=args.slots, max_len=args.max_len,
-            block_size=args.block_size, num_blocks=args.max_blocks,
-            prefill_chunk=args.prefill_chunk))
-    else:
-        engine = ServingEngine(params, cfg, ServeConfig(
-            slots=args.slots, max_len=args.max_len))
+    engine = build_engine(params, cfg, ServeOptions(
+        paged=args.paged, slots=args.slots, max_len=args.max_len,
+        block_size=args.block_size, num_blocks=args.max_blocks,
+        prefill_chunk=args.prefill_chunk))
 
     rng = jax.random.PRNGKey(1)
     for rid in range(args.requests):

@@ -168,3 +168,45 @@ def report_dict(r: TraceReport) -> dict:
         "cycles_by_op": dict(r.cycles_by_op),
         "energy_by_op": {k: round(v, 3) for k, v in r.energy_by_op.items()},
     }
+
+
+# ---------------------------------------------------------------------------
+# Device-fault census (ROADMAP item 4): price a call's injected bit errors
+# ---------------------------------------------------------------------------
+
+def bit_error_census(profile, cells: int, start: int = 0) -> dict:
+    """Error budget of ``cells`` cell reads under a device profile.
+
+    Stuck-at counts are EXACT — the profile's fault map is frozen, so the
+    census is a prefix-sum lookup over the wrapped cell span, not a
+    sample (``core/physics.py:stuck_counts``).  Retention flips redraw
+    per read, so their entry is the rounded expectation — deterministic
+    given (profile, cells), which is what lets CI gate
+    ``arch_bit_errors_total`` exactly.
+    """
+    from repro.core import physics
+    s0, s1 = physics.stuck_counts(profile, cells, start)
+    return {
+        "cells": cells,
+        "stuck0": s0,
+        "stuck1": s1,
+        "retention": int(round(profile.ber_retention * cells)),
+    }
+
+
+def subarray_error_masks(profile, spec: ArraySpec) -> list[dict]:
+    """Per-subarray stuck-fault masks for one wave over ``spec``.
+
+    Subarray ``s`` owns physical cells ``[s*cps, (s+1)*cps)`` of the
+    profile's map (wrapping when the chip is larger than ``map_cells``);
+    each entry reports that subarray's stuck-cell population — the mask
+    the scheduler would program around on a mapped part, and the
+    per-shard breakdown behind ``arch_bit_errors_total``.
+    """
+    cps = spec.cells_per_subarray
+    return [
+        {"subarray": s, **{k: v for k, v in
+                           bit_error_census(profile, cps, s * cps).items()
+                           if k != "retention"}}
+        for s in range(spec.subarrays)
+    ]

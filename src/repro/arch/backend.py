@@ -28,20 +28,34 @@ backend by name needs no plumbing changes to re-target hardware geometry.
 from __future__ import annotations
 
 import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.arch import accounting, trace
 from repro.arch.schedule import compile_schedule
 from repro.arch.spec import ArraySpec, DEFAULT_SPEC
 from repro.arch.tiler import tile_matmul
+from repro.core import physics
 from repro.core.costmodel import CostParams, DEFAULT_PARAMS
 from repro.sc import backends as sc_backends
+from repro.sc import encoding
 from repro.sc.config import ScConfig
 from repro.sc.registry import register_backend
 
 # Numerics size classes (cells = products × nbit).
 _PALLAS_CELL_CAP = 1 << 16          # packed Pallas engine (O(cells/8) bytes)
 _BITEXACT_PRODUCT_CAP = 1 << 21     # jnp binomial engine (O(products) floats)
+
+# Device-realism size classes (non-ideal cfg.device only): calls up to this
+# many cells run the REALIZED per-cell maps (each virtual cell reads its
+# own frozen rate/fault entry); larger calls model the cell population
+# statistically through the map's rate quantiles.
+_DEVICE_CELL_CAP = 1 << 20
+_RATE_QUANTILES = 16
 
 _SPEC_STACK: list[ArraySpec] = [DEFAULT_SPEC]
 _PARAMS_STACK: list[CostParams] = [DEFAULT_PARAMS]
@@ -90,6 +104,8 @@ def schedule_call(m: int, k: int, n: int, nbit: int,
 
 
 def _numerics(key, x, w, cfg: ScConfig):
+    if cfg.device is not None and not cfg.device.is_ideal:
+        return _device_numerics(key, x, w, cfg)
     products = x.shape[0] * x.shape[1] * w.shape[1]
     cells = products * cfg.nbit
     if cfg.nbit % 32 == 0 and cells <= _PALLAS_CELL_CAP:
@@ -97,6 +113,81 @@ def _numerics(key, x, w, cfg: ScConfig):
     if products <= _BITEXACT_PRODUCT_CAP:
         return sc_backends.bitexact(key, x, w, cfg)
     return sc_backends.moment(key, x, w, cfg)
+
+
+@functools.lru_cache(maxsize=8)
+def _rate_quantiles(profile: physics.DeviceProfile) -> np.ndarray:
+    """Fixed 16-point quantile summary of the profile's realized
+    survival-rate map — the population statistics the large-call device
+    path models cells with."""
+    maps = physics.cell_maps(profile)
+    qs = (np.arange(_RATE_QUANTILES) + 0.5) / _RATE_QUANTILES
+    return np.quantile(maps.rate.astype(np.float64), qs).astype(np.float32)
+
+
+def _device_numerics(key, x, w, cfg: ScConfig):
+    """Stochastic estimate under a NON-ideal device profile.
+
+    A cell whose realized rate exponent is ``r`` survives a pulse
+    programmed for probability ``p`` with probability ``p**r``
+    (P' = exp(-tau*r) = P**r — core/physics.py).  Small calls
+    (≤ ``_DEVICE_CELL_CAP`` cells) read their literal wrapped span of the
+    frozen per-cell maps: Bernoulli(p**r_c) per cell, retention flips,
+    then stuck-at overrides, then pop-count — the realized array.  Larger
+    calls collapse the cell population to its rate quantiles and draw the
+    CLT count with the same closed-form stuck/retention densities, so the
+    bias and variance match the realized path's ensemble.
+    """
+    prof = cfg.device
+    sx, px, scx = encoding.encode(x, cfg)
+    sw, pw, scw = encoding.encode(w, cfg)
+    p_prod = jnp.clip(px[:, :, None] * pw[None, :, :], 0.0, 1.0)  # (M, K, N)
+    sign = sx[:, :, None] * sw[None, :, :]
+    m, k = x.shape
+    n = w.shape[1]
+    cells = m * k * n * cfg.nbit
+    f = prof.ber_retention
+    if cells <= _DEVICE_CELL_CAP:
+        maps = physics.cell_maps(prof)
+        idx = physics.cell_span(prof, cells).reshape(m, k, n, cfg.nbit)
+        rate = jnp.asarray(maps.rate[idx])
+        pc = p_prod[..., None] ** rate
+        key_b, key_f = jax.random.split(key)
+        bits = jax.random.uniform(key_b, pc.shape) < pc
+        if f > 0.0:
+            bits ^= jax.random.uniform(key_f, pc.shape) < f
+        if prof.ber_stuck0 > 0.0:
+            bits &= ~jnp.asarray(maps.stuck0[idx])
+        if prof.ber_stuck1 > 0.0:
+            bits |= jnp.asarray(maps.stuck1[idx])
+        est = jnp.mean(bits.astype(jnp.float32), axis=-1)
+    else:
+        maps = physics.cell_maps(prof)
+        rq = jnp.asarray(_rate_quantiles(prof))
+        pv = jnp.mean(p_prod[..., None] ** rq, axis=-1)
+        s0 = float(maps.cum0[-1]) / prof.map_cells
+        s1 = float(maps.cum1[-1]) / prof.map_cells
+        p_read = (1.0 - s0 - s1) * (pv * (1.0 - f) + (1.0 - pv) * f) + s1
+        noise = jax.random.normal(key, p_read.shape, dtype=jnp.float32)
+        var = p_read * (1.0 - p_read) / cfg.nbit
+        est = p_read + noise * jnp.sqrt(var)
+    return jnp.sum(sign * est, axis=1) * (scx * scw)
+
+
+def _note_bit_errors(profile: physics.DeviceProfile, cells: int,
+                     shards: int) -> None:
+    """Export one priced call's fault census (``accounting.py``) to the
+    global registry as ``arch_bit_errors_total{kind,shard}``.  Trace-time
+    and census-exact, so CI can gate the series bit-for-bit."""
+    reg = obs.default_registry()
+    if not reg.enabled:
+        return
+    census = accounting.bit_error_census(profile, cells)
+    c = reg.counter(
+        "arch_bit_errors_total",
+        "modeled bit errors injected at the array backend, by fault kind")
+    for kind in ("stuck0", "stuck1", "retention"):
+        c.inc(census[kind] * shards, kind=kind, shard=str(shards))
 
 
 def _note_pricing(rec: trace.CallRecord) -> None:
@@ -147,4 +238,12 @@ def array(key, x, w, cfg: ScConfig):
         # active spec should fail loudly even when nobody is tracing).
         tile_matmul(x.shape[0], x.shape[1], w.shape[1], cfg.nbit,
                     current_spec())
+    if cfg.device is not None and not cfg.device.is_ideal:
+        # Device-realism telemetry is independent of arch trace
+        # collection: any traced-or-not call on a faulty device exports
+        # its census when the global registry is enabled.
+        from repro.sc import sharded as sc_sharded
+        _note_bit_errors(cfg.device,
+                         x.shape[0] * x.shape[1] * w.shape[1] * cfg.nbit,
+                         sc_sharded.current_shard_count())
     return _numerics(key, x, w, cfg)

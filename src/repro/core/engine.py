@@ -102,20 +102,46 @@ def sc_multiply(key, x_int, y_int, cfg: EngineConfig):
     return p_est, product
 
 
-@partial(jax.jit, static_argnums=(3,))
+def _profile_cells(profile: physics.DeviceProfile, batch_shape, nbit: int):
+    """Realized per-cell (delta, i_c) for a batch of MULs: MUL ``q`` of
+    the batch occupies virtual cells ``q*nbit ..`` of the profile's
+    frozen map, so batched engine runs and the variance studies read the
+    SAME manufacturing spread the ``array`` backend does."""
+    n_muls = 1
+    for d in batch_shape:
+        n_muls *= int(d)
+    delta_c, ic_c = physics.mul_cell_params(profile, n_muls, nbit)
+    shape = tuple(batch_shape) + (nbit,)
+    return delta_c.reshape(shape), ic_c.reshape(shape)
+
+
+@partial(jax.jit, static_argnums=(3,), static_argnames=("profile",))
 def sc_multiply_states(key, tau_x, tau_y, cfg: EngineConfig,
-                       *, i_c_ua=physics.I_C_UA):
+                       *, i_c_ua=physics.I_C_UA, profile=None):
     """Lower-level entry: pulses already converted; returns the raw cell states.
 
     Used by the variance studies (per-cell ``i_c_ua`` arrays) and by tests
     that assert on the distribution of the bits themselves.
+
+    ``profile`` (a :class:`physics.DeviceProfile`) is the one device knob:
+    it supplies realized per-cell (Delta, I_c) from the profile's frozen
+    variation maps and overrides a loose ``i_c_ua``.  Variation only —
+    stuck-at / retention FAULTS are an array-readout phenomenon and are
+    injected at the arch backend (``arch/backend.py``), not per-MUL here.
     """
     batch_shape = jnp.broadcast_shapes(jnp.shape(tau_x), jnp.shape(tau_y))
     cells = batch_shape + (cfg.nbit,)
+    delta = physics.DELTA
+    i_ua = physics.I_C_UA
+    if profile is not None:
+        delta, i_c_ua = _profile_cells(profile, batch_shape, cfg.nbit)
+        i_ua = profile.i_c_ua       # operating current = nominal I_c
     kx, ky = jax.random.split(key)
     state = preset(cells)
-    state = apply_pulse(kx, state, jnp.asarray(tau_x)[..., None], i_c_ua=i_c_ua)
-    state = apply_pulse(ky, state, jnp.asarray(tau_y)[..., None], i_c_ua=i_c_ua)
+    state = apply_pulse(kx, state, jnp.asarray(tau_x)[..., None],
+                        i_ua=i_ua, i_c_ua=i_c_ua, delta=delta)
+    state = apply_pulse(ky, state, jnp.asarray(tau_y)[..., None],
+                        i_ua=i_ua, i_c_ua=i_c_ua, delta=delta)
     return state
 
 

@@ -19,8 +19,11 @@ logarithm first: the device supplies the inverse exponential for free.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 
 import jax.numpy as jnp
+import numpy as np
 
 # Paper constants (Section II-B).
 DELTA = 60.9                 # thermal-stability parameter of the MTJ
@@ -39,7 +42,245 @@ class DeviceParams:
     def with_ic_fluctuation(self, sigma_frac: float) -> "DeviceParams":
         # Convenience for scalar analyses; array-level fluctuations are applied
         # in variance.py where per-bit i_c tensors are drawn.
+        warnings.warn(
+            "DeviceParams.with_ic_fluctuation is deprecated; describe device "
+            "non-ideality with physics.DeviceProfile(sigma_ic=...) instead",
+            DeprecationWarning, stacklevel=2)
         return dataclasses.replace(self, i_c_ua=self.i_c_ua * (1.0 + sigma_frac))
+
+
+# ---------------------------------------------------------------------------
+# Device-realism profile (ROADMAP item 4)
+# ---------------------------------------------------------------------------
+
+# Salt for the profile's variation/fault stream.  Together with
+# ``DeviceProfile.seed`` it forms the Threefry key, so maps never collide
+# with the operand bitstream counters (sc/ctr_rng.py keys those off the
+# caller's PRNG key).  Part of the bit-reproducibility contract: changing
+# it re-rolls every committed variation map.
+_MAP_SALT = 0x00DE51CE
+
+# Lane assignment within the map stream (the Threefry counter's second
+# word).  Lanes 0/1 feed the Box-Muller pair behind the (Delta, I_c)
+# gaussians; lane 2 places the stuck-at faults.
+_LANE_BM1, _LANE_BM2, _LANE_STUCK = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """Frozen description of one SOT-MRAM array's non-idealities.
+
+    This is THE device knob: every layer that models hardware (the core
+    MUL engine, the variance studies, the ``array`` arch backend, the
+    serve API's ``--fault-profile``) accepts one of these instead of
+    loose ``delta=`` / ``i_c_ua=`` kwargs.
+
+    Calibrated variation: each physical cell ``c`` perturbs the paper's
+    nominal parameters with frozen manufacturing spread —
+    ``Delta_c = delta * (1 + sigma_delta * g1(c))`` and
+    ``I_c,c = i_c_ua * (1 + sigma_ic * g2(c))`` where ``(g1, g2)`` are
+    standard gaussians derived from the pinned Threefry counter stream
+    (``sc/ctr_rng.py``) at counter ``c``.  Maps are therefore
+    bit-reproducible per cell index and identical across processes.
+
+    Fault taxonomy (all rates are per-cell probabilities):
+
+    * ``ber_stuck0`` — cell reads 0 regardless of its write (open device).
+    * ``ber_stuck1`` — cell reads 1 regardless of its write (short).
+    * ``ber_retention`` — per-read symmetric bit flip (thermal upset
+      between write and read); unlike stuck faults this redraws every
+      operation.
+
+    ``map_cells`` is the physical cell population; virtual cell ``v``
+    (product index x bitstream position) wraps to ``v % map_cells``,
+    modeling wave-pipelined reuse of the same subarrays.  The profile is
+    hashable, so it rides ``ScConfig`` through jit as a static argument.
+    """
+
+    delta: float = DELTA
+    i_c_ua: float = I_C_UA
+    sigma_delta: float = 0.0
+    sigma_ic: float = 0.0
+    ber_stuck0: float = 0.0
+    ber_stuck1: float = 0.0
+    ber_retention: float = 0.0
+    seed: int = 0
+    map_cells: int = 1 << 18
+
+    def __post_init__(self):
+        if self.ber_stuck0 + self.ber_stuck1 > 1.0:
+            raise ValueError("ber_stuck0 + ber_stuck1 must be <= 1")
+        for f in ("sigma_delta", "sigma_ic", "ber_stuck0", "ber_stuck1",
+                  "ber_retention"):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be >= 0")
+        if self.map_cells < 1:
+            raise ValueError("map_cells must be >= 1")
+
+    @property
+    def is_ideal(self) -> bool:
+        """True when the profile changes NOTHING relative to the paper's
+        idealized math.  Nominal ``delta``/``i_c_ua`` offsets don't break
+        ideality on their own: at the operating point ``I = I_c`` the
+        rate multiplier is exactly 1 for every cell when ``sigma_* = 0``.
+        """
+        return (self.sigma_delta == 0.0 and self.sigma_ic == 0.0
+                and not self.has_faults)
+
+    @property
+    def has_faults(self) -> bool:
+        return (self.ber_stuck0 > 0.0 or self.ber_stuck1 > 0.0
+                or self.ber_retention > 0.0)
+
+    def replace(self, **kw) -> "DeviceProfile":
+        return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def ideal(cls) -> "DeviceProfile":
+        return cls()
+
+
+# Named profiles (--fault-profile on the serve launcher; envelope bench
+# rows).  "tiny" keeps map_cells small so chaos smokes and unit tests pay
+# milliseconds, not map-build time.
+DEVICE_PROFILES: dict[str, DeviceProfile] = {
+    "ideal": DeviceProfile(),
+    "tiny": DeviceProfile(sigma_delta=0.05, sigma_ic=0.02,
+                          ber_stuck0=5e-4, ber_stuck1=5e-4,
+                          ber_retention=1e-4, map_cells=1 << 14),
+    "calibrated": DeviceProfile(sigma_delta=0.05, sigma_ic=0.03),
+    "harsh": DeviceProfile(sigma_delta=0.10, sigma_ic=0.05,
+                           ber_stuck0=2e-3, ber_stuck1=2e-3,
+                           ber_retention=1e-3),
+}
+
+
+def named_profile(name: str) -> DeviceProfile:
+    try:
+        return DEVICE_PROFILES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown device profile {name!r}; available: "
+            f"{', '.join(sorted(DEVICE_PROFILES))}") from None
+
+
+def resolve_profile(profile) -> DeviceProfile | None:
+    """None | name | DeviceProfile -> DeviceProfile | None."""
+    if profile is None or isinstance(profile, DeviceProfile):
+        return profile
+    return named_profile(profile)
+
+
+@dataclasses.dataclass(frozen=True)
+class _CellMaps:
+    """Realized per-cell state of one profile (host-side numpy).
+
+    ``rate`` is the cell's survival-rate exponent: a pulse programmed for
+    survival probability ``p`` on an ideal cell survives with ``p**rate``
+    on this one (P' = exp(-tau * r) = P**r), so ``rate == 1`` exactly at
+    ``sigma_* = 0``.  ``cum0``/``cum1`` are prefix counts of stuck cells,
+    for exact O(1) fault census over any wrapped cell span.
+    """
+
+    delta: np.ndarray       # float32 (map_cells,) realized Delta
+    i_c_ua: np.ndarray      # float32 (map_cells,) realized I_c
+    rate: np.ndarray        # float32 (map_cells,) survival-rate exponent
+    stuck0: np.ndarray      # bool    (map_cells,)
+    stuck1: np.ndarray      # bool    (map_cells,)
+    cum0: np.ndarray        # int64   (map_cells + 1,) prefix stuck0 count
+    cum1: np.ndarray        # int64   (map_cells + 1,)
+
+
+@functools.lru_cache(maxsize=8)
+def cell_maps(profile: DeviceProfile) -> _CellMaps:
+    """Build (and cache) the profile's frozen variation + fault maps.
+
+    Sampled from the pinned counter-based Threefry stream at key
+    ``(seed, _MAP_SALT)``, counter = cell index: bit-reproducible per
+    cell, independent of call order, shared by every consumer of the
+    profile (core engine, array backend, accounting census).
+    """
+    import jax
+
+    from repro.sc import ctr_rng     # lazy: core must not import sc at module load
+
+    n = profile.map_cells
+
+    def lane(c1):
+        # ensure_compile_time_eval: map realization is host-side constant
+        # folding even when first triggered from inside a jit trace (the
+        # array backend realizes maps at model-trace time).
+        with jax.ensure_compile_time_eval():
+            key2 = jnp.asarray([profile.seed & 0xFFFFFFFF, _MAP_SALT],
+                               jnp.uint32)
+            c0 = jnp.arange(n, dtype=jnp.uint32)
+            w = ctr_rng.uniform_words(key2, c0, jnp.uint32(c1))
+        # uint32 -> open (0, 1): never 0 (log-safe), never 1
+        return (np.asarray(w).astype(np.float64) + 0.5) / 2.0**32
+
+    u1, u2 = lane(_LANE_BM1), lane(_LANE_BM2)
+    r = np.sqrt(-2.0 * np.log(u1))
+    g_delta = r * np.cos(2.0 * np.pi * u2)
+    g_ic = r * np.sin(2.0 * np.pi * u2)
+
+    delta_c = profile.delta * (1.0 + profile.sigma_delta * g_delta)
+    delta_c = np.maximum(delta_c, 1.0)
+    ic_c = profile.i_c_ua * np.maximum(1.0 + profile.sigma_ic * g_ic, 0.05)
+    # Survival-rate exponent at the paper's operating point I = nominal
+    # I_c.  sigma_ic shifts the cell's overdrive off zero, sigma_delta
+    # amplifies that shift; with sigma_ic = 0 the exponent is exp(0) = 1
+    # for EVERY cell, whatever sigma_delta says — the identity behind the
+    # bit-identity acceptance tests.
+    rate = np.exp(-delta_c * (1.0 - profile.i_c_ua / ic_c))
+
+    uf = lane(_LANE_STUCK)
+    stuck0 = uf < profile.ber_stuck0
+    stuck1 = (~stuck0) & (uf < profile.ber_stuck0 + profile.ber_stuck1)
+    cum0 = np.zeros(n + 1, np.int64)
+    cum1 = np.zeros(n + 1, np.int64)
+    np.cumsum(stuck0, out=cum0[1:])
+    np.cumsum(stuck1, out=cum1[1:])
+    return _CellMaps(delta=delta_c.astype(np.float32),
+                     i_c_ua=ic_c.astype(np.float32),
+                     rate=rate.astype(np.float32),
+                     stuck0=stuck0, stuck1=stuck1, cum0=cum0, cum1=cum1)
+
+
+def cell_span(profile: DeviceProfile, n_cells: int,
+              start: int = 0) -> np.ndarray:
+    """Physical cell indices backing ``n_cells`` virtual cells from
+    ``start``, wrapping round-robin at ``map_cells``."""
+    return (start + np.arange(n_cells, dtype=np.int64)) % profile.map_cells
+
+
+def stuck_counts(profile: DeviceProfile, n_cells: int,
+                 start: int = 0) -> tuple[int, int]:
+    """EXACT (stuck0, stuck1) reads among ``n_cells`` wrapped cell reads
+    starting at virtual cell ``start`` — full map wraps contribute the
+    map totals, the remainder reads the prefix sums.  O(1)."""
+    if profile.is_ideal or n_cells <= 0:
+        return 0, 0
+    maps = cell_maps(profile)
+    m = profile.map_cells
+    start %= m
+    wraps, rem = divmod(start + n_cells, m)
+
+    def count(cum):
+        total = int(cum[-1])
+        return wraps * total - int(cum[start]) + int(cum[rem])
+
+    return count(maps.cum0), count(maps.cum1)
+
+
+def mul_cell_params(profile: DeviceProfile, n_muls: int, nbit: int):
+    """Per-cell (delta, i_c_ua) for a batch of MUL engines, as jnp arrays
+    of shape (n_muls, nbit): MUL ``q`` occupies virtual cells
+    ``q*nbit .. q*nbit+nbit-1`` of the profile's map.  Feed these to
+    ``engine.apply_pulse`` / ``sc_multiply_states`` for realized-device
+    core-engine runs (the arch backend derives the same cells itself)."""
+    maps = cell_maps(profile)
+    idx = cell_span(profile, n_muls * nbit).reshape(n_muls, nbit)
+    return jnp.asarray(maps.delta[idx]), jnp.asarray(maps.i_c_ua[idx])
 
 
 def p_unswitched(tau_ns, i_ua, *, delta=DELTA, i_c_ua=I_C_UA):

@@ -22,15 +22,42 @@ Two fluctuation sources from the paper:
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import conversion, engine, physics
 
 
+def sc_mul_with_profile(key, x_int, y_int, cfg: engine.EngineConfig,
+                        profile: physics.DeviceProfile):
+    """One SC MUL on a realized device: per-cell (Delta, I_c) come from
+    the profile's FROZEN Threefry variation maps rather than a fresh iid
+    draw per call, so repeated MULs exercise the same manufacturing
+    spread the ``array`` backend and the envelope bench see.  Batched
+    operands occupy consecutive MUL cell banks of the map.  Returns p_est.
+    """
+    tau_x = conversion.operand_to_tau(jnp.asarray(x_int, jnp.int32), cfg.conv)
+    tau_y = conversion.operand_to_tau(jnp.asarray(y_int, jnp.int32), cfg.conv)
+    state = engine.sc_multiply_states(key, tau_x, tau_y, cfg, profile=profile)
+    return engine.readout(state)
+
+
 def sc_mul_with_ic_variance(key, x_int, y_int, cfg: engine.EngineConfig,
                             sigma_ic: float):
-    """One SC MUL with per-cell I_c ~ N(I_c, (sigma_ic·I_c)²). Returns p_est."""
+    """One SC MUL with per-cell I_c ~ N(I_c, (sigma_ic·I_c)²). Returns p_est.
+
+    .. deprecated:: PR-10
+       Describe the spread with ``physics.DeviceProfile(sigma_ic=...)``
+       and call :func:`sc_mul_with_profile` — same physics, but the
+       per-cell draw is frozen and shared with the arch backend.  This
+       wrapper keeps the historical iid-per-call behavior.
+    """
+    warnings.warn(
+        "sc_mul_with_ic_variance is deprecated; use sc_mul_with_profile "
+        "with physics.DeviceProfile(sigma_ic=...)", DeprecationWarning,
+        stacklevel=2)
     kx, kv = jax.random.split(key)
     batch_shape = jnp.broadcast_shapes(jnp.shape(x_int), jnp.shape(y_int))
     ic = physics.I_C_UA * (

@@ -1,3 +1,4 @@
 from repro.ft.supervisor import (  # noqa: F401
-    EngineHealth, FaultInjector, HealthMonitor, StragglerMonitor,
-    Supervisor, WorkerFailure, engine_health)
+    ChaosMonkey, EngineHealth, FaultInjector, FleetSupervisor,
+    HealthMonitor, StragglerMonitor, Supervisor, WorkerFailure,
+    engine_health)

@@ -17,14 +17,21 @@ straggler — is modeled by the ``on_straggler`` callback; the default logs
 and continues (the step still completes: synchronous SPMD has no partial
 progress to lose).
 
-Serve-fleet health (ROADMAP item 5 groundwork): :func:`engine_health`
-reads one serving engine's ``repro.obs`` metrics registry into an
+Serve-fleet health (ROADMAP item 5): :func:`engine_health` reads one
+serving engine's ``repro.obs`` metrics registry into an
 :class:`EngineHealth` snapshot (error rate, queue depth, active rows,
 eviction pressure), and :class:`HealthMonitor` turns a stream of those
-snapshots into degraded/healthy verdicts — real telemetry instead of the
-stub inputs the drain logic will eventually act on.  No drain logic
-lives here yet; a degraded verdict is just the signal a future
-supervisor uses to drain the shard and resume its requests elsewhere.
+snapshots into degraded/healthy verdicts.  :class:`FleetSupervisor`
+ACTS on the verdicts: it serves a fleet of paged engines, polls each
+shard's registry (windowed, so readmitted shards can prove themselves
+healthy) plus its heartbeat, and on degradation DRAINS the shard —
+``PagedServingEngine.drain()`` checkpoints every in-flight request —
+and resumes the checkpoints on healthy shards (warm KV-payload resume
+for attention families, cold recompute resume otherwise).  The
+per-(request key, position) rng contract makes either resume
+token-identical to an unfaulted run; :class:`ChaosMonkey` injects
+deterministic degradations so tests and the ``--chaos`` launcher can
+assert exactly that.
 """
 
 from __future__ import annotations
@@ -97,9 +104,10 @@ def engine_health(registry) -> EngineHealth:
         v = registry.value(name, **labels)
         return 0 if v is None else v
 
-    # serve_ticks_total is labeled by kind (prefill/decode)
+    # serve_ticks_total is labeled by kind (prefill/decode/spec)
     ticks = int(num("serve_ticks_total", kind="prefill")
-                + num("serve_ticks_total", kind="decode"))
+                + num("serve_ticks_total", kind="decode")
+                + num("serve_ticks_total", kind="spec"))
     errors = int(num("serve_errors_total"))
     return EngineHealth(
         ticks=ticks,
@@ -121,16 +129,32 @@ class HealthMonitor:
     ``patience`` consecutive observations (one hot tick is load, a
     sustained backlog is a stall).  ``observe`` returns the verdict and
     appends degraded events to ``events``; acting on the verdict
-    (drain + resume) is deliberately out of scope here.
+    (drain + resume) is :class:`FleetSupervisor`'s job.
+
+    ``window=True`` judges each observation on the DELTA since the
+    previous one instead of lifetime totals — the mode a fleet needs for
+    READMISSION: counters are monotonic, so a shard that errored once
+    would otherwise read degraded forever, and a readmitted shard could
+    never prove itself healthy again.
     """
 
     max_error_rate: float = 0.0
     max_queue_depth: int = 64
     patience: int = 2
+    window: bool = False
     events: list = dataclasses.field(default_factory=list)
     _backlog_streak: int = 0
+    _prev: EngineHealth | None = None
 
     def observe(self, health: EngineHealth) -> bool:
+        if self.window:
+            prev = self._prev if self._prev is not None else EngineHealth()
+            self._prev = health
+            dt = health.ticks - prev.ticks
+            de = health.errors - prev.errors
+            health = dataclasses.replace(
+                health, ticks=dt, errors=de,
+                error_rate=de / dt if dt else float(de > 0))
         degraded = False
         if health.error_rate > self.max_error_rate:
             degraded = True
@@ -217,3 +241,196 @@ class Supervisor:
                 step = extra["data_step"]
                 history["recoveries"].append((step, restored))
         return state, history
+
+
+# ---------------------------------------------------------------------------
+# Serve-fleet supervision: drain a degraded shard, resume elsewhere
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ChaosMonkey:
+    """Deterministic chaos schedule for serve fleets: at fleet tick
+    ``at_tick``, degrade shard ``shard`` by bumping its engine's
+    ``serve_errors_total`` — exactly the telemetry a real crash loop
+    would emit, so the drain path under test is the production path."""
+
+    at_tick: int = 4
+    shard: int = 1
+    errors: int = 3
+    fired: bool = False
+
+    def maybe_fire(self, tick: int, engines: list) -> bool:
+        if self.fired or tick < self.at_tick or self.shard >= len(engines):
+            return False
+        self.fired = True
+        engines[self.shard]._m_errors.inc(self.errors)
+        return True
+
+
+class FleetSupervisor:
+    """Serves one request stream across a fleet of paged engines with
+    health-driven shard failover.
+
+    ``engine_factory(shard) -> PagedServingEngine`` builds each shard
+    (all shards MUST share the engine seed so per-request keys — and
+    therefore tokens — are shard-independent).  ``submit`` round-robins
+    over healthy shards; ``step`` ticks every healthy shard, fires the
+    optional :class:`ChaosMonkey`, then polls health.
+
+    A shard is degraded when its windowed :class:`HealthMonitor` trips
+    on the engine's own registry (``HealthMonitor.observe_registry``) or
+    its heartbeat goes stale (a shard that stopped ticking).  Degrading
+    drains the shard's every request (``PagedServingEngine.drain()``)
+    and resumes the checkpoints round-robin on the remaining healthy
+    shards — clients just see their requests finish.  The drained shard
+    sits out ``cooldown`` polls, then READMITS; the windowed monitor
+    judges it on post-readmission deltas, so one historical incident
+    does not blacklist it forever.  A shard never double-drains: only
+    healthy shards are polled for degradation.
+
+    Fleet-level telemetry (``ft_*`` series, labeled by shard) lands in
+    ``metrics`` — pass the global ``repro.obs`` registry to export it
+    beside the substrate counters.
+    """
+
+    def __init__(self, engine_factory, shards: int = 2, metrics=None,
+                 monitor_factory=None, heartbeat_timeout_s: float = 600.0,
+                 cooldown: int = 4, chaos: ChaosMonkey | None = None):
+        from repro import obs
+        if shards < 2:
+            raise ValueError("a failover fleet needs >= 2 shards")
+        self.shards = shards
+        self.engines = [engine_factory(s) for s in range(shards)]
+        mk = monitor_factory or (lambda s: HealthMonitor(window=True))
+        self.monitors = [mk(s) for s in range(shards)]
+        self.healthy = [True] * shards
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.last_heartbeat = [time.monotonic()] * shards
+        self.cooldown = cooldown
+        self._cooldowns = [0] * shards
+        self.chaos = chaos
+        self.ticks = 0
+        self._rr = 0
+        self.drains = 0
+        self.resumed = 0
+        self.readmissions = 0
+        m = metrics if metrics is not None else obs.MetricsRegistry()
+        self.metrics = m
+        self._m_degraded = m.counter(
+            "ft_shard_degraded_total",
+            "degraded verdicts acted on, labeled shard")
+        self._m_drains = m.counter(
+            "ft_shard_drains_total", "shards drained, labeled shard")
+        self._m_resumed = m.counter(
+            "ft_requests_resumed_total",
+            "drained requests resumed, labeled by TARGET shard")
+        self._m_readmit = m.counter(
+            "ft_shard_readmissions_total",
+            "drained shards readmitted after cooldown, labeled shard")
+        for s in range(shards):
+            # materialize every shard's series at 0 so exporters (and
+            # obs_report --require gates) see the family even on
+            # incident-free runs
+            for c in (self._m_degraded, self._m_drains, self._m_resumed,
+                      self._m_readmit):
+                c.inc(0, shard=str(s))
+
+    # ------------------------------------------------------------------
+    def submit(self, req) -> int:
+        """Round-robin the request onto a healthy shard; returns it."""
+        order = [s for s in range(self.shards) if self.healthy[s]]
+        if not order:
+            raise RuntimeError("no healthy shards to submit to")
+        shard = order[self._rr % len(order)]
+        self._rr += 1
+        self.engines[shard].submit(req)
+        return shard
+
+    def heartbeat(self, shard: int) -> None:
+        self.last_heartbeat[shard] = time.monotonic()
+
+    def heartbeat_stale(self, shard: int) -> bool:
+        return (time.monotonic() - self.last_heartbeat[shard]
+                > self.heartbeat_timeout_s)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One fleet tick: tick healthy shards, fire chaos, poll health."""
+        progressed = False
+        for s in range(self.shards):
+            if not self.healthy[s]:
+                continue
+            try:
+                progressed = bool(self.engines[s].step()) or progressed
+                self.heartbeat(s)
+            except Exception:
+                # the engine already counted serve_errors_total; the poll
+                # below turns the telemetry into a drain
+                pass
+        self.ticks += 1
+        if self.chaos is not None:
+            self.chaos.maybe_fire(self.ticks, self.engines)
+        self.poll()
+        return progressed
+
+    def poll(self) -> None:
+        """Health pass: degrade-and-drain tripped shards, readmit cooled
+        ones.  Only healthy shards are judged — no double drains."""
+        for s in range(self.shards):
+            if not self.healthy[s]:
+                self._cooldowns[s] -= 1
+                if self._cooldowns[s] <= 0:
+                    self.healthy[s] = True
+                    self.readmissions += 1
+                    self._m_readmit.inc(shard=str(s))
+                continue
+            tripped = self.monitors[s].observe_registry(
+                self.engines[s].metrics)
+            if tripped or self.heartbeat_stale(s):
+                self.degrade(s)
+
+    def degrade(self, shard: int) -> list:
+        """Drain ``shard`` and resume its requests on healthy shards.
+        Idempotent per incident: an already-degraded shard is skipped."""
+        if not self.healthy[shard]:
+            return []
+        self._m_degraded.inc(shard=str(shard))
+        self.healthy[shard] = False
+        self._cooldowns[shard] = self.cooldown
+        ckpts = self.engines[shard].drain()
+        self.drains += 1
+        self._m_drains.inc(shard=str(shard))
+        targets = [s for s in range(self.shards) if self.healthy[s]]
+        if not targets:
+            raise RuntimeError(
+                f"shard {shard} degraded with no healthy shard left to "
+                "resume its requests on")
+        for i, ckpt in enumerate(ckpts):
+            t = targets[i % len(targets)]
+            self.engines[t].restore(ckpt)
+            self.resumed += 1
+            self._m_resumed.inc(shard=str(t))
+        return ckpts
+
+    # ------------------------------------------------------------------
+    @property
+    def finished(self) -> list:
+        out = []
+        for e in self.engines:
+            out.extend(e.finished)
+        return out
+
+    def has_work(self) -> bool:
+        return any(e.scheduler.has_work() for e in self.engines)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list:
+        ticks = 0
+        while self.has_work() and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished
+
+    def close(self) -> None:
+        for e in self.engines:
+            e.close()

@@ -5,14 +5,26 @@
     PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
         --block-size 8 --max-blocks 64          # paged KV + chunked prefill
     PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
+        --fault-profile tiny                    # serve on a non-ideal device
+    PYTHONPATH=src python -m repro.launch.serve --smoke --chaos \
+        --fault-profile tiny                    # 2-shard fleet, drain/resume
+    PYTHONPATH=src python -m repro.launch.serve --smoke --paged \
         --metrics-out metrics.prom --trace-out trace.jsonl   # telemetry
+
+Engine flags are DERIVED from ``serve.ServeOptions`` field metadata
+(``serve.add_cli_args``) — the launcher only hand-rolls its workload
+knobs (--arch/--smoke/--requests/--max-new/--temperature/
+--shared-prefix) and output paths.  Construction goes through
+``serve.build_engine``; ``--chaos`` serves a 2-shard paged fleet under
+``ft.FleetSupervisor`` with a deterministic mid-run shard degradation
+and prints the drain/resume ledger.
 
 ``--metrics-out`` / ``--trace-out`` turn observability on: the global
 ``repro.obs`` registry is enabled (so substrate counters — sc dispatch,
-autotune hits, arch pricing — record too), a tracer is installed for the
-run, and after the drain the Prometheus exposition and span JSONL land
-at the given paths (``.json`` metrics suffix writes the JSON snapshot
-instead).  Render either with ``tools/obs_report.py``.
+autotune hits, arch pricing, device bit errors — record too), a tracer
+is installed for the run, and after the drain the Prometheus exposition
+and span JSONL land at the given paths (``.json`` metrics suffix writes
+the JSON snapshot instead).  Render either with ``tools/obs_report.py``.
 """
 
 from __future__ import annotations
@@ -23,12 +35,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import obs, serve
 from repro.configs import get_config, get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.models import lm, params as params_lib
-from repro.serve import (PagedServeConfig, PagedServingEngine, Request,
-                         ServeConfig, ServingEngine)
+from repro.serve import Request
 from repro.sharding import sc_shard_rules
 
 
@@ -37,48 +48,8 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--mesh", action="store_true",
-                    help="shard the SC substrate over a local device mesh "
-                         "(slots map to data shards; needs a stochastic "
-                         "--arch sc_backend; fixed-slot engine only)")
-    ap.add_argument("--model-parallel", type=int, default=1,
-                    help="model axis size of the local mesh (--mesh)")
-    ap.add_argument("--paged", action="store_true",
-                    help="serve through the paged continuous-batching "
-                         "engine (block-pool KV cache + chunked prefill + "
-                         "eviction-on-OOM; every family — ssm/hybrid archs "
-                         "carry state slots beside the block table)")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per KV block (--paged)")
-    ap.add_argument("--max-blocks", type=int, default=0,
-                    help="pool size in blocks incl. the null block "
-                         "(--paged; 0 = size for slots x max_len)")
-    ap.add_argument("--prefill-chunk", type=int, default=8,
-                    help="prompt tokens fed per row per tick (--paged)")
-    ap.add_argument("--fused-attention", action="store_true",
-                    help="run the fused paged-attention Pallas kernel "
-                         "instead of gather+chunk_decode_attention "
-                         "(--paged; see docs/kernels.md)")
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="block-level prefix caching: requests sharing a "
-                         "prompt prefix adopt cached KV blocks instead of "
-                         "re-prefilling (--paged; forces content-chain "
-                         "rng — see docs/prefix_caching.md)")
-    ap.add_argument("--speculative", action="store_true",
-                    help="draft/verify speculative decoding on greedy "
-                         "rows: draft with the paired cheap backend, "
-                         "verify in one multi-token pass (--paged)")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="draft tokens per speculative step "
-                         "(--speculative)")
-    ap.add_argument("--draft-backend", default="",
-                    help="draft backend name (--speculative; default: "
-                         "the registry pairing for the arch's sc_backend)")
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "request (exercises the prefix cache; 0 = fully "
@@ -91,33 +62,28 @@ def main(argv=None):
                     help="write per-request trace spans as JSONL after "
                          "drain (enables observability; convert with "
                          "tools/obs_report.py --chrome)")
+    serve.add_cli_args(ap)          # every ServeOptions field as a flag
     args = ap.parse_args(argv)
-    if args.paged and args.mesh:
-        raise SystemExit("--paged and --mesh are mutually exclusive (the "
-                         "paged engine is single-mesh-slice; see "
-                         "docs/serving.md)")
-    if args.fused_attention and not args.paged:
-        raise SystemExit("--fused-attention needs --paged (it is the "
-                         "paged decode path's kernel)")
-    if (args.prefix_cache or args.speculative) and not args.paged:
-        raise SystemExit("--prefix-cache/--speculative need --paged (they "
-                         "are paged-engine features; see "
-                         "docs/prefix_caching.md)")
+    options = serve.from_cli_args(args)
+    if options.chaos and not options.paged:
+        options = options.replace(paged=True)   # chaos implies --paged
+    try:
+        options.validate()
+    except ValueError as e:
+        raise SystemExit(f"bad flag combination: {e}") from None
 
     cfg = (get_smoke_config(args.arch) if args.smoke
            else get_config(args.arch))
     cfg = cfg.replace(param_dtype=jnp.float32, act_dtype=jnp.float32)
-    if args.fused_attention:
-        cfg = cfg.replace(paged_attn="fused")
     if cfg.frontend == "embeddings":
         raise SystemExit("serve demo uses token-frontend archs")
 
-    key = jax.random.PRNGKey(args.seed)
+    key = jax.random.PRNGKey(options.seed)
     params = params_lib.init_params(key, lm.lm_param_specs(cfg),
                                     cfg.param_dtype)
     mesh = rules = None
-    if args.mesh:
-        mesh = make_local_mesh(args.model_parallel)
+    if options.mesh:
+        mesh = make_local_mesh(options.model_parallel)
         rules = sc_shard_rules(mesh)
         print(f"serving on mesh {dict(mesh.shape)}")
     # Observability: one registry holds the serve-layer AND substrate
@@ -128,68 +94,76 @@ def main(argv=None):
     if args.metrics_out or args.trace_out:
         metrics = obs.enable()
         tracer = obs.install_tracer(obs.Tracer())
-    if args.paged:
-        engine = PagedServingEngine(params, cfg, PagedServeConfig(
-            slots=args.slots, max_len=args.max_len, seed=args.seed,
-            block_size=args.block_size, num_blocks=args.max_blocks,
-            prefill_chunk=args.prefill_chunk,
-            prefix_cache=args.prefix_cache, speculative=args.speculative,
-            spec_k=args.spec_k, draft_backend=args.draft_backend),
-            metrics=metrics, tracer=tracer)
-        print(f"paged engine: block_size={args.block_size} "
-              f"pool={engine.kv.cfg.num_blocks} blocks "
-              f"(chunked prefill {args.prefill_chunk}"
-              + (", prefix cache" if args.prefix_cache else "")
-              + (f", speculative k={args.spec_k}" if args.speculative
-                 else "") + ")")
-    else:
-        engine = ServingEngine(params, cfg, ServeConfig(
-            slots=args.slots, max_len=args.max_len, seed=args.seed),
-            mesh=mesh, shard_rules=rules, metrics=metrics, tracer=tracer)
+    if options.fault_profile:
+        p = options.resolve_profile()
+        print(f"device profile '{options.fault_profile}': "
+              f"sigma_delta={p.sigma_delta} sigma_ic={p.sigma_ic} "
+              f"ber={p.ber_stuck0}/{p.ber_stuck1}/{p.ber_retention}")
 
-    rng = jax.random.PRNGKey(args.seed + 1)
+    if options.chaos:
+        fleet = _build_fleet(params, cfg, options, metrics, tracer)
+        engine = None
+    else:
+        fleet = None
+        engine = serve.build_engine(params, cfg, options, mesh=mesh,
+                                    shard_rules=rules, metrics=metrics,
+                                    tracer=tracer)
+        if options.paged:
+            print(f"paged engine: block_size={options.block_size} "
+                  f"pool={engine.kv.cfg.num_blocks} blocks "
+                  f"(chunked prefill {options.prefill_chunk}"
+                  + (", prefix cache" if options.prefix_cache else "")
+                  + (f", speculative k={options.spec_k}"
+                     if options.speculative else "") + ")")
+
+    rng = jax.random.PRNGKey(options.seed + 1)
     shared = []
     if args.shared_prefix:
         rng, k = jax.random.split(rng)
         shared = jax.random.randint(
             k, (args.shared_prefix,), 3, cfg.vocab).tolist()
+    target = fleet if fleet is not None else engine
     for rid in range(args.requests):
         rng, k = jax.random.split(rng)
         plen = int(jax.random.randint(k, (), 4, 17))
         prompt = shared + jax.random.randint(
             k, (plen,), 3, cfg.vocab).tolist()
-        engine.submit(Request(rid=rid, prompt=prompt,
+        target.submit(Request(rid=rid, prompt=prompt,
                               max_new_tokens=args.max_new,
                               temperature=args.temperature))
 
     t0 = time.time()
-    finished = engine.run_until_drained()
+    finished = target.run_until_drained()
     dt = time.time() - t0
     total_tokens = sum(len(r.generated) for r in finished)
     print(f"served {len(finished)} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/max(dt,1e-9):.1f} tok/s)")
-    if args.paged:
+    if fleet is not None:
+        print(f"  fleet: {fleet.shards} shards, "
+              f"{fleet.drains} drained, {fleet.resumed} requests resumed, "
+              f"{fleet.readmissions} readmitted")
+    elif options.paged:
         print(f"  {engine.ticks} ticks, {engine.evictions} evictions, "
               f"{engine.kv.pool.free_blocks} blocks free at drain")
         lat = engine.decode_latency_ms()
         if lat:
             print(f"  decode p50={lat['decode_p50_ms']:.2f} "
                   f"p95={lat['decode_p95_ms']:.2f} ms/token")
-        if args.prefix_cache:
+        if options.prefix_cache:
             hit = engine.metrics.value(
                 "serve_prefix_cache_hit_tokens_total") or 0
             pre = engine.metrics.value("serve_prefill_tokens_total") or 0
             rate = hit / max(hit + pre, 1)
             print(f"  prefix cache: {int(hit)} tokens adopted "
                   f"(hit rate {rate:.2f})")
-        if args.speculative:
+        if options.speculative:
             drafted = engine.metrics.value(
                 "serve_spec_drafted_tokens_total") or 0
             acc = engine.metrics.value(
                 "serve_spec_accepted_tokens_total") or 0
             print(f"  speculative: {int(acc)}/{int(drafted)} drafted "
                   "tokens accepted")
-    for r in finished[:4]:
+    for r in sorted(finished, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: prompt[:6]={r.prompt[:6]} "
               f"generated={r.generated}")
     if args.metrics_out:
@@ -207,6 +181,22 @@ def main(argv=None):
         obs.uninstall_tracer(tracer)
         obs.disable()
     return finished
+
+
+def _build_fleet(params, cfg, options, metrics, tracer):
+    """2-shard paged fleet under the FT supervisor with a deterministic
+    chaos schedule: shard 1 degrades mid-run, its in-flight requests
+    drain onto shard 0 and finish there."""
+    from repro.ft import supervisor as ftsup
+    shard_opts = options.replace(chaos=False, mesh=False)
+    fleet = ftsup.FleetSupervisor(
+        lambda shard: serve.build_engine(params, cfg, shard_opts,
+                                         tracer=tracer),
+        shards=2, metrics=metrics,
+        chaos=ftsup.ChaosMonkey(at_tick=2, shard=1))
+    print("chaos fleet: 2 shards, degradation scheduled at tick 2 "
+          "on shard 1")
+    return fleet
 
 
 if __name__ == "__main__":

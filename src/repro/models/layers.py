@@ -137,12 +137,12 @@ def dense(x, w, cfg, key=None, bias=None, site: str = "dense"):
         # fused engine — same key, same bits, one kernel launch
         sc_cfg = sc.ScConfig(
             backend=sc.fast_backend(cfg.sc_backend, cfg.sc_nbit),
-            nbit=cfg.sc_nbit)
+            nbit=cfg.sc_nbit, device=sc.current_device_profile())
         y = _dense_rows(key, x, w, sc_cfg)
     else:
         sc_cfg = sc.ScConfig(
             backend=sc.fast_backend(cfg.sc_backend, cfg.sc_nbit),
-            nbit=cfg.sc_nbit)
+            nbit=cfg.sc_nbit, device=sc.current_device_profile())
         scope = sc.active_mesh()
         if scope is not None:
             mesh, rules = scope
@@ -254,7 +254,7 @@ def expert_dense(x, w, cfg, key=None, site: str = "moe_wi"):
     keys = site_key(key, site, eidx)                    # (b, e, c, 2)
     sc_cfg = sc.ScConfig(
         backend=sc.fast_backend(cfg.sc_backend, cfg.sc_nbit),
-        nbit=cfg.sc_nbit)
+        nbit=cfg.sc_nbit, device=sc.current_device_profile())
 
     def one_expert(_, inp):
         we, xe, ke = inp              # (d, f), (b, c, d), (b, c, 2)

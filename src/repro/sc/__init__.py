@@ -42,7 +42,9 @@ Public API (see ``docs/backends.md`` for the selection guide):
   :class:`~repro.sc.sharded.ScShardRules` — the mesh-sharded path.
 """
 
-from repro.sc.config import ScConfig                      # noqa: F401
+from repro.core.physics import DeviceProfile              # noqa: F401  (re-export)
+from repro.sc.config import (                             # noqa: F401
+    ScConfig, current_device_profile, use_device_profile)
 from repro.sc.registry import (                           # noqa: F401
     available_backends, draft_backend, fast_backend, get_backend,
     register_backend, register_draft_pair, register_rows_backend, sc_dot,

@@ -10,7 +10,10 @@ static argument.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+
+from repro.core.physics import DeviceProfile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +53,44 @@ class ScConfig:
     # interpret=True runs the kernels on CPU (this container); real TPUs
     # flip it off to compile through Mosaic.
     interpret: bool = True
+    # Device-realism profile (core/physics.py:DeviceProfile): frozen
+    # per-cell variation + bit-error rates.  None or an ideal profile is
+    # bit-identical to the paper's idealized math on every backend; a
+    # non-ideal profile is realized by the ``array`` backend only (the
+    # functional backends model the ideal device by construction).
+    device: DeviceProfile | None = None
 
     def replace(self, **kw) -> "ScConfig":
         """Functional update, e.g. ``cfg.replace(backend="moment")``."""
         return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Ambient device profile: one knob for call sites that build their own
+# ScConfig internally (models/layers.py:dense, and through it the serve
+# engines).  ``build_engine(options=ServeOptions(fault_profile=...))``
+# enters this scope around each tick so every stochastic matmul the model
+# traces picks the profile up without threading it through ModelConfig.
+# ---------------------------------------------------------------------------
+
+_PROFILE_STACK: list[DeviceProfile] = []
+
+
+@contextlib.contextmanager
+def use_device_profile(profile: DeviceProfile | None):
+    """Scope under which internally-constructed ``ScConfig``s carry
+    ``device=profile``.  ``None`` is allowed and means no-op (callers can
+    pass an unconditional context)."""
+    if profile is None:
+        yield
+        return
+    _PROFILE_STACK.append(profile)
+    try:
+        yield
+    finally:
+        _PROFILE_STACK.pop()
+
+
+def current_device_profile() -> DeviceProfile | None:
+    """Innermost :func:`use_device_profile` scope, or None."""
+    return _PROFILE_STACK[-1] if _PROFILE_STACK else None

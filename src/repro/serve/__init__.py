@@ -1,3 +1,5 @@
+from repro.serve.api import (                             # noqa: F401
+    ServeOptions, add_cli_args, build_engine, from_cli_args)
 from repro.serve.engine import (                          # noqa: F401
     PagedServeConfig, PagedServingEngine, Request, ServeConfig,
     ServingEngine)

@@ -1,0 +1,226 @@
+"""Unified serve-engine construction: ONE options dataclass, ONE builder.
+
+Before PR-10 every consumer picked a constructor (``ServingEngine`` vs
+``PagedServingEngine``), a config class (``ServeConfig`` vs
+``PagedServeConfig``) and a pile of loose kwargs (mesh, shard rules,
+fused attention via ``cfg.paged_attn`` edits); the launcher re-declared
+all of it as ~17 hand-rolled argparse flags.  This module is the single
+source of truth:
+
+* :class:`ServeOptions` — every serve knob as one frozen dataclass.
+  Field metadata carries the CLI flag/help, so :func:`add_cli_args`
+  DERIVES the launcher's argparse surface from the dataclass (a new
+  field, e.g. ``fault_profile``, becomes a flag with zero launcher
+  edits).
+* :func:`build_engine` — ``(params, cfg, options) -> engine``.  Picks
+  the engine class, applies cross-cutting options (fused attention onto
+  ``cfg.paged_attn``, a device :class:`~repro.core.physics.DeviceProfile`
+  onto the SC substrate), and is the ONLY supported construction path —
+  calling ``ServingEngine(...)`` / ``PagedServingEngine(...)`` directly
+  still works but emits ``DeprecationWarning``.
+
+    from repro.serve import ServeOptions, build_engine
+    engine = build_engine(params, cfg, ServeOptions(paged=True,
+                                                    prefix_cache=True))
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import physics
+
+
+def _opt(default, help="", flag=None, metavar=None, cli=True):  # noqa: A002
+    """Field with CLI metadata (flag defaults to ``--field-name``)."""
+    return dataclasses.field(default=default, metadata={
+        "help": help, "flag": flag, "metavar": metavar, "cli": cli})
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeOptions:
+    """Every serve-engine knob in one frozen dataclass.
+
+    Subsumes ``ServeConfig`` (fixed-slot) and ``PagedServeConfig``
+    (paged) plus the construction-time extras (mesh, fused attention,
+    fault profile).  Fields irrelevant to the selected engine are simply
+    unused — ``build_engine`` validates the combinations that would
+    silently lie (e.g. ``prefix_cache`` without ``paged``).
+    """
+
+    paged: bool = _opt(
+        False, "serve through the paged continuous-batching engine "
+        "(block-pool KV cache + chunked prefill + eviction-on-OOM; every "
+        "family — ssm/hybrid archs carry state slots beside the block "
+        "table)")
+    slots: int = _opt(4, "concurrent batch rows")
+    max_len: int = _opt(128, "max context tokens per request")
+    seed: int = _opt(0, "engine base PRNG seed (per-request keys fold "
+                        "off it)")
+    eos_id: int = _opt(2, "end-of-sequence token id", cli=False)
+    block_size: int = _opt(16, "tokens per KV block (--paged)")
+    num_blocks: int = _opt(
+        0, "pool size in blocks incl. the null block (--paged; 0 = size "
+        "for slots x max_len)", flag="--max-blocks")
+    prefill_chunk: int = _opt(
+        8, "prompt tokens fed per row per tick (--paged)")
+    rng_mode: str = _opt(
+        "request", "per-token sampling-key derivation: 'request' "
+        "(rid-keyed) or 'content' (token-content chain; what "
+        "--prefix-cache switches to)", cli=False)
+    fused_attention: bool = _opt(
+        False, "run the fused paged-attention Pallas kernel instead of "
+        "gather+chunk_decode_attention (--paged; see docs/kernels.md)")
+    prefix_cache: bool = _opt(
+        False, "block-level prefix caching: requests sharing a prompt "
+        "prefix adopt cached KV blocks instead of re-prefilling "
+        "(--paged; forces content-chain rng — see "
+        "docs/prefix_caching.md)")
+    speculative: bool = _opt(
+        False, "draft/verify speculative decoding on greedy rows: draft "
+        "with the paired cheap backend, verify in one multi-token pass "
+        "(--paged)")
+    spec_k: int = _opt(4, "draft tokens per speculative step "
+                          "(--speculative)")
+    draft_backend: str = _opt(
+        "", "draft backend name (--speculative; default: the registry "
+        "pairing for the arch's sc_backend)")
+    mesh: bool = _opt(
+        False, "shard the SC substrate over a local device mesh (slots "
+        "map to data shards; needs a stochastic --arch sc_backend; "
+        "fixed-slot engine only)")
+    model_parallel: int = _opt(
+        1, "model axis size of the local mesh (--mesh)")
+    fault_profile: str = _opt(
+        "", "serve on a non-ideal device: named "
+        "core/physics.py:DeviceProfile (ideal|tiny|calibrated|harsh) "
+        "realized by the array backend — per-cell variation + stuck/"
+        "retention bit errors, exported as arch_bit_errors_total",
+        metavar="NAME")
+    chaos: bool = _opt(
+        False, "chaos-test fault tolerance: serve a 2-shard paged fleet "
+        "under ft.FleetSupervisor, inject a deterministic mid-run shard "
+        "degradation, and drain/resume its requests on the healthy "
+        "shard (implies --paged)")
+
+    def replace(self, **kw) -> "ServeOptions":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> None:
+        """Raise ValueError on knob combinations that cannot serve."""
+        if self.paged and self.mesh:
+            raise ValueError(
+                "paged and mesh are mutually exclusive (the paged engine "
+                "is single-mesh-slice; see docs/serving.md)")
+        if self.fused_attention and not self.paged:
+            raise ValueError("fused_attention needs paged=True (it is "
+                             "the paged decode path's kernel)")
+        if (self.prefix_cache or self.speculative) and not self.paged:
+            raise ValueError(
+                "prefix_cache/speculative need paged=True (they are "
+                "paged-engine features; see docs/prefix_caching.md)")
+        if self.chaos and self.mesh:
+            raise ValueError("chaos runs a paged fleet; drop mesh=True")
+        if self.rng_mode not in ("request", "content"):
+            raise ValueError(f"rng_mode must be 'request' or 'content', "
+                             f"got {self.rng_mode!r}")
+        self.resolve_profile()   # raises ValueError on unknown names
+
+    def resolve_profile(self) -> physics.DeviceProfile | None:
+        """``fault_profile`` as a DeviceProfile (None when unset/ideal-
+        by-name is kept — an explicit 'ideal' still threads through so
+        the bit-identity contract is exercised end to end)."""
+        if not self.fault_profile:
+            return None
+        try:
+            return physics.resolve_profile(self.fault_profile)
+        except KeyError as e:
+            raise ValueError(str(e)) from None
+
+
+def add_cli_args(ap, skip: tuple = ()) -> None:
+    """Derive argparse flags from :class:`ServeOptions` fields — the
+    launcher's one-source-of-truth surface.  Booleans become
+    ``store_true`` switches; everything else keeps its field default."""
+    for f in dataclasses.fields(ServeOptions):
+        meta = f.metadata
+        if not meta.get("cli", True) or f.name in skip:
+            continue
+        flag = meta.get("flag") or "--" + f.name.replace("_", "-")
+        if isinstance(f.default, bool):
+            ap.add_argument(flag, action="store_true", dest=f.name,
+                            help=meta.get("help", ""))
+        else:
+            kw = {}
+            if meta.get("metavar"):
+                kw["metavar"] = meta["metavar"]
+            ap.add_argument(flag, type=type(f.default), default=f.default,
+                            dest=f.name, help=meta.get("help", ""), **kw)
+
+
+def from_cli_args(args, **overrides) -> ServeOptions:
+    """Collect parsed :func:`add_cli_args` flags back into options."""
+    kw = {f.name: getattr(args, f.name)
+          for f in dataclasses.fields(ServeOptions)
+          if f.metadata.get("cli", True) and hasattr(args, f.name)}
+    kw.update(overrides)
+    return ServeOptions(**kw)
+
+
+def build_engine(params, cfg, options: ServeOptions | None = None, *,
+                 collect_arch_trace: bool = False, metrics=None,
+                 tracer=None, mesh=None, shard_rules=None):
+    """THE serve-engine constructor: options -> the right engine, wired.
+
+    * ``options.paged`` selects ``PagedServingEngine`` vs the fixed-slot
+      ``ServingEngine`` (``mesh``/``shard_rules`` ride along for the
+      fixed-slot sharded path).
+    * ``options.fused_attention`` applies ``cfg.paged_attn='fused'`` —
+      callers no longer edit the model config by hand.
+    * ``options.fault_profile`` resolves to a DeviceProfile, re-routes an
+      exact/unset ``cfg.sc_backend`` onto the ``array`` backend (the only
+      backend that realizes non-ideal devices), and arms the engine's
+      per-tick ``sc.use_device_profile`` scope.
+
+    Legacy direct construction keeps working for one release but warns;
+    this function is the only path the launchers, benches and docs use.
+    """
+    from repro.serve import engine as engine_mod
+
+    options = options or ServeOptions()
+    options.validate()
+    if options.fused_attention:
+        cfg = cfg.replace(paged_attn="fused")
+    profile = options.resolve_profile()
+    if profile is not None and not profile.is_ideal \
+            and cfg.sc_backend in ("", "exact"):
+        # Non-ideal devices exist only on the array backend; exact math
+        # cannot carry a fault model.
+        cfg = cfg.replace(sc_backend="array")
+    rng_mode = options.rng_mode
+    with engine_mod._api_construction():
+        if options.paged:
+            engine = engine_mod.PagedServingEngine(
+                params, cfg, engine_mod.PagedServeConfig(
+                    slots=options.slots, max_len=options.max_len,
+                    eos_id=options.eos_id, seed=options.seed,
+                    block_size=options.block_size,
+                    num_blocks=options.num_blocks,
+                    prefill_chunk=options.prefill_chunk,
+                    prefix_cache=options.prefix_cache,
+                    rng_mode=rng_mode,
+                    speculative=options.speculative,
+                    spec_k=options.spec_k,
+                    draft_backend=options.draft_backend),
+                collect_arch_trace=collect_arch_trace,
+                metrics=metrics, tracer=tracer)
+        else:
+            engine = engine_mod.ServingEngine(
+                params, cfg, engine_mod.ServeConfig(
+                    slots=options.slots, max_len=options.max_len,
+                    eos_id=options.eos_id, seed=options.seed),
+                collect_arch_trace=collect_arch_trace,
+                mesh=mesh, shard_rules=shard_rules,
+                metrics=metrics, tracer=tracer)
+    engine.device_profile = profile
+    return engine

@@ -53,6 +53,7 @@ import contextlib
 import dataclasses
 import math
 import time
+import warnings
 from functools import partial
 
 import jax
@@ -61,6 +62,32 @@ import numpy as np
 
 from repro import obs
 from repro.models import attention, lm
+
+# Depth of serve.api.build_engine construction scopes on this thread.
+# Direct ``ServingEngine(...)`` / ``PagedServingEngine(...)`` calls see
+# depth 0 and emit a DeprecationWarning; build_engine enters the scope so
+# the sanctioned path constructs silently.
+_API_DEPTH = 0
+
+
+@contextlib.contextmanager
+def _api_construction():
+    global _API_DEPTH
+    _API_DEPTH += 1
+    try:
+        yield
+    finally:
+        _API_DEPTH -= 1
+
+
+def _warn_direct(name: str) -> None:
+    if _API_DEPTH == 0:
+        warnings.warn(
+            f"constructing {name} directly is deprecated; use "
+            "repro.serve.build_engine(params, cfg, ServeOptions(...)) — "
+            "it picks the engine, applies fused attention / device fault "
+            "profiles, and validates option combinations",
+            DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -141,12 +168,24 @@ class _ArchTracedEngine:
     process.
     """
 
+    # Non-ideal device realized by the SC substrate while this engine
+    # ticks (set by serve.api.build_engine from options.fault_profile;
+    # None = ideal).  Entered as an ambient sc.use_device_profile scope
+    # around step tracing so layers thread it into every ScConfig.
+    device_profile = None
+
     def _init_arch(self, collect_arch_trace: bool, cfg) -> None:
         self._arch_closed = False
         self.arch_collector = None
         if collect_arch_trace and cfg.sc_backend == "array":
             from repro import arch
             self.arch_collector = arch.TraceCollector().install()
+
+    def _device_scope(self):
+        if self.device_profile is None:
+            return contextlib.nullcontext()
+        from repro import sc
+        return sc.use_device_profile(self.device_profile)
 
     def _init_obs(self, metrics, tracer) -> None:
         """Engine-local telemetry (``repro.obs``): each engine owns its
@@ -219,6 +258,7 @@ class ServingEngine(_ArchTracedEngine):
     def __init__(self, params, cfg, scfg: ServeConfig,
                  collect_arch_trace: bool = False, mesh=None,
                  shard_rules=None, metrics=None, tracer=None):
+        _warn_direct("ServingEngine")
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -337,7 +377,7 @@ class ServingEngine(_ArchTracedEngine):
     def step(self):
         """One engine tick: admit, batched decode, per-slot sample, harvest.
         A raise mid-tick detaches the arch collector before propagating."""
-        with self._detach_on_error():
+        with self._detach_on_error(), self._device_scope():
             return self._step()
 
     def _step(self):
@@ -446,6 +486,7 @@ class PagedServingEngine(_ArchTracedEngine):
     def __init__(self, params, cfg, scfg: PagedServeConfig,
                  collect_arch_trace: bool = False, metrics=None,
                  tracer=None):
+        _warn_direct("PagedServingEngine")
         from repro.serve import kv_cache as kvc
         from repro.serve import scheduler as sched
         self.cache_plan = kvc.CachePlan.for_config(cfg)
@@ -572,7 +613,7 @@ class PagedServingEngine(_ArchTracedEngine):
         """One tick: scheduler plan → one jitted chunked step → sample the
         rows that consumed their pending context.  Returns False when
         idle.  A raise mid-tick detaches the arch collector."""
-        with self._detach_on_error():
+        with self._detach_on_error(), self._device_scope():
             plan = self.scheduler.plan()
             if plan is None:
                 return False
@@ -751,6 +792,117 @@ class PagedServingEngine(_ArchTracedEngine):
                 jnp.asarray(temps, jnp.float32))).tolist()
             for slot, seq in plan.sample_rows:
                 self.scheduler.on_token(slot, seq, toks[slot])
+
+    # ------------------------------------------------------------------
+    # Drain / resume (ft.FleetSupervisor's shard-failover contract)
+    # ------------------------------------------------------------------
+    def drain(self) -> list:
+        """Checkpoint and release EVERY request this engine holds
+        (admitted rows and the waiting queue), returning one checkpoint
+        dict per request, admission order first.
+
+        Each checkpoint carries the request identity (rid, prompt,
+        generated-so-far, per-request key, sampling knobs) plus — for
+        attention-only families — the scheduler position (``fed``,
+        ``pending``) and the request's filled KV block payload gathered
+        from the page pool, so a healthy shard can resume WARM via
+        :meth:`restore` without re-prefilling.  State-carrying families
+        (ssm/hybrid) checkpoint cold: their recurrent state is not
+        reconstructible from pages, so resume recomputes from tokens —
+        which the per-(request key, position) rng contract makes
+        token-identical anyway (same property eviction-resume relies
+        on).  After ``drain()`` the engine is empty and trivially
+        drainable."""
+        sched = self.scheduler
+        ckpts = []
+        for slot in range(self.scfg.slots):
+            seq = sched.rows[slot]
+            if seq is None:
+                continue
+            ckpts.append(self._checkpoint_seq(seq, warm=True))
+            self.kv.release(seq.req.rid)
+            sched.rows[slot] = None
+            if seq in sched.admit_stack:
+                sched.admit_stack.remove(seq)
+            self.tracer.event("request.drain", rid=seq.req.rid,
+                              fed=seq.fed, warm=ckpts[-1]["kv"] is not None)
+        for seq in list(sched.waiting):
+            if seq.fed:                      # pre-seeded resume never admitted
+                self.kv.release(seq.req.rid)
+                seq.reset_for_recompute()
+            ckpts.append(self._checkpoint_seq(seq, warm=False))
+            self.tracer.event("request.drain", rid=seq.req.rid,
+                              fed=0, warm=False)
+        sched.waiting.clear()
+        sched._update_gauges()
+        return ckpts
+
+    def _checkpoint_seq(self, seq, warm: bool) -> dict:
+        req = seq.req
+        ckpt = dict(
+            rid=req.rid, prompt=list(req.prompt),
+            generated=list(req.generated),
+            max_new_tokens=req.max_new_tokens,
+            temperature=req.temperature,
+            key=None if req.key is None else np.asarray(req.key),
+            fed=seq.fed, pending=list(seq.pending),
+            prefilling=seq.prefilling,
+            block_size=self.scfg.block_size, kv=None)
+        if warm and seq.fed and not self.cache_plan.has_state:
+            from repro.serve.kv_cache import blocks_for
+            nblk = blocks_for(seq.fed, self.scfg.block_size)
+            ids = jnp.asarray(self.kv.tables[req.rid][:nblk], jnp.int32)
+            ckpt["kv"] = {"k": np.asarray(self.pages["k"][:, ids]),
+                          "v": np.asarray(self.pages["v"][:, ids])}
+        return ckpt
+
+    def restore(self, ckpt: dict) -> bool:
+        """Resume one drained request on THIS engine.  With a KV payload
+        (and matching block geometry + headroom) the resume is WARM:
+        fresh blocks are allocated, the payload scatters into the page
+        pool, and the request re-enters the admission queue at its
+        drained position.  Otherwise it falls back to a cold recompute
+        resume — a plain re-submit carrying generated-so-far, exactly the
+        eviction path.  Returns True for a warm resume."""
+        req = Request(rid=ckpt["rid"], prompt=list(ckpt["prompt"]),
+                      max_new_tokens=ckpt["max_new_tokens"],
+                      temperature=ckpt["temperature"])
+        req.generated = list(ckpt["generated"])
+        if ckpt["key"] is not None:
+            req.key = jnp.asarray(ckpt["key"])
+        if ckpt["kv"] is not None and self._restore_warm(req, ckpt):
+            self.tracer.event("request.resume", rid=req.rid,
+                              fed=ckpt["fed"], warm=True)
+            return True
+        self.submit(req)
+        self.tracer.event("request.resume", rid=req.rid, fed=0, warm=False)
+        return False
+
+    def _restore_warm(self, req, ckpt: dict) -> bool:
+        from repro.serve import scheduler as sched_mod
+        from repro.serve.kv_cache import blocks_for
+        fed = ckpt["fed"]
+        if (ckpt["block_size"] != self.scfg.block_size
+                or self.cache_plan.has_state
+                or fed == 0 or fed > self.scfg.max_len
+                or self.kv.tables.get(req.rid)
+                or not self.kv.has_room(req.rid, fed)
+                or not self.kv.ensure(req.rid, fed)):
+            return False
+        nblk = blocks_for(fed, self.scfg.block_size)
+        ids = jnp.asarray(self.kv.tables[req.rid][:nblk], jnp.int32)
+        self.pages = {
+            **self.pages,
+            "k": self.pages["k"].at[:, ids].set(
+                jnp.asarray(ckpt["kv"]["k"], self.pages["k"].dtype)),
+            "v": self.pages["v"].at[:, ids].set(
+                jnp.asarray(ckpt["kv"]["v"], self.pages["v"].dtype)),
+        }
+        seq = sched_mod.Sequence(req=req, key=req.key, fed=fed,
+                                 pending=list(ckpt["pending"]),
+                                 prefilling=ckpt["prefilling"])
+        self.scheduler.adopt(seq)
+        return True
 
     def decode_latency_ms(self):
         """p50/p95 decode wall ms per token — a view over the

@@ -200,6 +200,19 @@ class Scheduler:
         self.tracer.event("request.submit", rid=req.rid,
                           prompt_tokens=len(req.prompt))
 
+    def adopt(self, seq: Sequence) -> None:
+        """Queue a PRE-BUILT sequence at the admission head (warm
+        drain/resume): its first ``seq.fed`` positions already hold valid
+        KV under its rid's block table, so on admission it resumes
+        feeding ``pending`` from there instead of re-prefilling.
+        ``_admit``'s bookkeeping handles it unchanged — ``adopt_prefix``
+        no-ops on an existing table and ``ensure``/``has_room`` extend
+        it."""
+        self.waiting.appendleft(seq)
+        self._m_submitted.inc()
+        self._update_gauges()
+        self.tracer.event("request.adopt", rid=seq.req.rid, fed=seq.fed)
+
     def has_work(self) -> bool:
         return bool(self.waiting) or any(r is not None for r in self.rows)
 

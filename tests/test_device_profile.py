@@ -1,0 +1,128 @@
+"""DeviceProfile: validation, frozen map determinism, exact fault census,
+and the sigma=0/BER=0 ideality contract at the physics layer."""
+
+import numpy as np
+import pytest
+
+from repro.arch import accounting
+from repro.core import physics
+
+TINY = physics.DEVICE_PROFILES["tiny"]
+
+
+# ---------------------------------------------------------------------------
+# Profile dataclass
+# ---------------------------------------------------------------------------
+
+
+def test_default_profile_is_ideal():
+    p = physics.DeviceProfile()
+    assert p.is_ideal and not p.has_faults
+
+
+def test_nominal_offsets_alone_keep_ideality():
+    # at the operating point I = I_c the rate multiplier is exactly 1
+    # for every cell when sigma_* = 0, whatever the nominal values
+    assert physics.DeviceProfile(delta=50.0, i_c_ua=90.0).is_ideal
+
+
+def test_any_nonideality_breaks_ideality():
+    assert not physics.DeviceProfile(sigma_ic=0.01).is_ideal
+    assert not physics.DeviceProfile(ber_retention=1e-4).is_ideal
+    assert physics.DeviceProfile(ber_retention=1e-4).has_faults
+
+
+@pytest.mark.parametrize("bad", [
+    dict(sigma_delta=-0.1), dict(ber_stuck0=-1e-3),
+    dict(ber_stuck0=0.6, ber_stuck1=0.6), dict(map_cells=0),
+])
+def test_invalid_profiles_rejected(bad):
+    with pytest.raises(ValueError):
+        physics.DeviceProfile(**bad)
+
+
+def test_named_profiles_resolve():
+    assert physics.resolve_profile(None) is None
+    assert physics.resolve_profile("tiny") is TINY
+    assert physics.resolve_profile(TINY) is TINY
+    with pytest.raises(KeyError, match="unknown device profile"):
+        physics.named_profile("nope")
+
+
+def test_profile_is_hashable_jit_static():
+    assert hash(TINY) == hash(TINY.replace())
+
+
+# ---------------------------------------------------------------------------
+# Frozen maps: bit-reproducible, seed-keyed, wrap-around
+# ---------------------------------------------------------------------------
+
+
+def test_cell_maps_deterministic_and_seed_keyed():
+    a = physics.cell_maps(TINY)
+    b = physics.cell_maps(TINY.replace())         # fresh equal profile
+    np.testing.assert_array_equal(a.rate, b.rate)
+    np.testing.assert_array_equal(a.stuck0, b.stuck0)
+    c = physics.cell_maps(TINY.replace(seed=1))
+    assert not np.array_equal(a.rate, c.rate)
+
+
+def test_cell_maps_realize_the_profiled_spread():
+    prof = physics.DeviceProfile(sigma_ic=0.05, map_cells=1 << 14)
+    maps = physics.cell_maps(prof)
+    rel = np.asarray(maps.i_c_ua) / prof.i_c_ua - 1.0
+    assert abs(float(rel.std()) - 0.05) < 0.005   # ~N(0, sigma_ic)
+    # the exponent shift is symmetric around 0, so the MEDIAN rate is ~1
+    # (the mean is not: rate = exp(-delta*(1 - ic/ic_c)) is heavy-tailed)
+    np.testing.assert_allclose(np.median(np.asarray(maps.rate)), 1.0,
+                               atol=0.05)
+
+
+def test_ideal_maps_have_unit_rate_and_no_faults():
+    maps = physics.cell_maps(physics.DeviceProfile(map_cells=1 << 10))
+    np.testing.assert_array_equal(np.asarray(maps.rate),
+                                  np.ones(1 << 10, np.float32))
+    assert int(maps.cum0[-1]) == 0 and int(maps.cum1[-1]) == 0
+
+
+def test_cell_span_wraps_round_robin():
+    prof = TINY.replace(map_cells=8)
+    idx = physics.cell_span(prof, 20, start=5)
+    np.testing.assert_array_equal(idx[:3], [5, 6, 7])
+    np.testing.assert_array_equal(idx, (np.arange(20) + 5) % 8)
+
+
+# ---------------------------------------------------------------------------
+# Exact fault census (what arch_bit_errors_total / CI gates rely on)
+# ---------------------------------------------------------------------------
+
+
+def test_stuck_counts_match_brute_force():
+    prof = physics.DeviceProfile(ber_stuck0=0.02, ber_stuck1=0.01,
+                                 map_cells=1 << 10)
+    maps = physics.cell_maps(prof)
+    for n_cells, start in [(100, 0), (1 << 10, 0), (5000, 777), (3, 1023)]:
+        idx = physics.cell_span(prof, n_cells, start)
+        want = (int(np.asarray(maps.stuck0)[idx].sum()),
+                int(np.asarray(maps.stuck1)[idx].sum()))
+        assert physics.stuck_counts(prof, n_cells, start) == want
+
+
+def test_census_is_exact_and_deterministic():
+    cells = 3 * (1 << 14) + 17                    # >1 full map wrap
+    a = accounting.bit_error_census(TINY, cells)
+    assert a == accounting.bit_error_census(TINY, cells)
+    s0, s1 = physics.stuck_counts(TINY, cells)
+    assert (a["stuck0"], a["stuck1"]) == (s0, s1)
+    assert a["retention"] == int(round(TINY.ber_retention * cells))
+    z = accounting.bit_error_census(physics.DeviceProfile(), cells)
+    assert (z["stuck0"], z["stuck1"], z["retention"]) == (0, 0, 0)
+
+
+def test_mul_cell_params_tile_the_map():
+    prof = physics.DeviceProfile(sigma_delta=0.1, map_cells=1 << 12)
+    delta, ic = physics.mul_cell_params(prof, n_muls=4, nbit=64)
+    assert delta.shape == (4, 64) and ic.shape == (4, 64)
+    maps = physics.cell_maps(prof)
+    np.testing.assert_array_equal(np.asarray(delta)[0],
+                                  np.asarray(maps.delta)[:64])

@@ -170,3 +170,37 @@ def test_dense_reaches_pallas_kernel_end_to_end(key):
     assert float(jnp.abs(l1 - l2).max()) > 0     # stochastic substrate
     e1 = lm.forward(params, toks, cfg.replace(sc_backend="exact"))
     assert float(jnp.abs(l1 - e1).mean()) < 1.0  # moment-matched noise
+
+
+def test_ideal_device_profile_is_bit_identical_everywhere(key):
+    """Acceptance (PR-10): a DeviceProfile with sigma=0 and BER=0 changes
+    NOTHING — every backend (including the arch ``array`` backend, the
+    only one that realizes non-ideal devices) returns bit-identical
+    outputs with ``device=ideal`` vs ``device=None``."""
+    from repro.core import physics
+    x, w = _xw(key, m=4, k=32, n=4)
+    ideal = physics.DeviceProfile()
+    assert ideal.is_ideal
+    for backend in ALL_BACKENDS + ("array",):
+        cfg = sc.ScConfig(backend=backend, **_CFG)
+        y0 = sc.sc_dot(key, x, w, cfg)
+        y1 = sc.sc_dot(key, x, w, cfg.replace(device=ideal))
+        np.testing.assert_array_equal(
+            np.asarray(y0), np.asarray(y1),
+            err_msg=f"{backend}: ideal profile broke bit identity")
+
+
+def test_nonideal_profile_perturbs_only_the_array_backend(key):
+    """The fault model lives in the array backend alone: functional
+    backends model the ideal device by construction."""
+    from repro.core import physics
+    x, w = _xw(key, m=4, k=32, n=4)
+    tiny = physics.DEVICE_PROFILES["tiny"]
+    acfg = sc.ScConfig(backend="array", **_CFG)
+    ya0 = sc.sc_dot(key, x, w, acfg)
+    ya1 = sc.sc_dot(key, x, w, acfg.replace(device=tiny))
+    assert float(jnp.abs(ya0 - ya1).max()) > 0
+    bcfg = sc.ScConfig(backend="bitexact", **_CFG)
+    np.testing.assert_array_equal(
+        np.asarray(sc.sc_dot(key, x, w, bcfg)),
+        np.asarray(sc.sc_dot(key, x, w, bcfg.replace(device=tiny))))

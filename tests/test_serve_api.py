@@ -1,0 +1,161 @@
+"""The unified serve API: ServeOptions validation, CLI derivation,
+build_engine routing, and the legacy-constructor deprecation contract."""
+
+import argparse
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm, params as P
+from repro.serve import (PagedServingEngine, Request, ServeConfig,
+                         ServeOptions, ServingEngine, add_cli_args,
+                         build_engine, from_cli_args)
+from repro.serve.engine import PagedServeConfig
+
+F32 = dict(param_dtype=jnp.float32, act_dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def setup(key):
+    cfg = get_smoke_config("qwen2-0.5b").replace(**F32)
+    params = P.init_params(key, lm.lm_param_specs(cfg), cfg.param_dtype)
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# ServeOptions.validate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad, match", [
+    (dict(paged=True, mesh=True), "mutually exclusive"),
+    (dict(fused_attention=True), "needs paged"),
+    (dict(prefix_cache=True), "need paged"),
+    (dict(speculative=True), "need paged"),
+    (dict(chaos=True, mesh=True), "drop mesh"),
+    (dict(rng_mode="dice"), "rng_mode"),
+    (dict(fault_profile="broken-chip"), "unknown device profile"),
+])
+def test_validate_rejects_unservable_combos(bad, match):
+    with pytest.raises(ValueError, match=match):
+        ServeOptions(**bad).validate()
+
+
+def test_validate_accepts_the_full_paged_stack():
+    ServeOptions(paged=True, fused_attention=True, prefix_cache=True,
+                 speculative=True, fault_profile="tiny").validate()
+
+
+def test_resolve_profile_none_when_unset():
+    assert ServeOptions().resolve_profile() is None
+    assert ServeOptions(fault_profile="tiny").resolve_profile().sigma_ic \
+        == 0.02
+
+
+# ---------------------------------------------------------------------------
+# CLI derivation: the launcher's flags come FROM the dataclass
+# ---------------------------------------------------------------------------
+
+
+def test_cli_round_trip_through_derived_flags():
+    ap = argparse.ArgumentParser()
+    add_cli_args(ap)
+    args = ap.parse_args(["--paged", "--block-size", "8", "--max-blocks",
+                          "32", "--fault-profile", "tiny", "--seed", "3"])
+    opts = from_cli_args(args)
+    assert opts.paged and opts.block_size == 8
+    assert opts.num_blocks == 32          # --max-blocks maps onto the field
+    assert opts.fault_profile == "tiny" and opts.seed == 3
+    # defaults survive for untouched fields
+    assert opts.slots == ServeOptions().slots
+
+
+def test_cli_defaults_reproduce_default_options():
+    ap = argparse.ArgumentParser()
+    add_cli_args(ap)
+    assert from_cli_args(ap.parse_args([])) == ServeOptions()
+
+
+def test_non_cli_fields_stay_off_the_surface():
+    ap = argparse.ArgumentParser()
+    add_cli_args(ap)
+    with pytest.raises(SystemExit):
+        ap.parse_args(["--rng-mode", "content"])    # cli=False field
+
+
+# ---------------------------------------------------------------------------
+# build_engine routing
+# ---------------------------------------------------------------------------
+
+
+def test_build_engine_selects_engine_class(setup):
+    params, cfg = setup
+    assert isinstance(build_engine(params, cfg), ServingEngine)
+    assert isinstance(
+        build_engine(params, cfg, ServeOptions(paged=True, block_size=4)),
+        PagedServingEngine)
+
+
+def test_build_engine_applies_fused_attention_to_cfg(setup):
+    params, cfg = setup
+    eng = build_engine(params, cfg, ServeOptions(paged=True, block_size=4,
+                                                 fused_attention=True))
+    assert eng.cfg.paged_attn == "fused"
+
+
+def test_build_engine_routes_fault_profile_onto_array_backend(setup):
+    params, cfg = setup
+    assert cfg.sc_backend in ("", "exact")   # the premise: exact math arch
+    eng = build_engine(params, cfg,
+                       ServeOptions(paged=True, block_size=4,
+                                    fault_profile="tiny"))
+    assert eng.cfg.sc_backend == "array"
+    assert eng.device_profile.sigma_delta == 0.05
+    # an ideal profile threads through but does NOT force the array
+    # backend (bit-identity contract: ideal == paper math everywhere)
+    eng2 = build_engine(params, cfg, ServeOptions(fault_profile="ideal"))
+    assert eng2.cfg.sc_backend == cfg.sc_backend
+    assert eng2.device_profile.is_ideal
+
+
+def test_build_engine_validates(setup):
+    params, cfg = setup
+    with pytest.raises(ValueError, match="needs paged"):
+        build_engine(params, cfg, ServeOptions(fused_attention=True))
+
+
+def test_faulted_engine_serves(setup):
+    """End-to-end: a tiny-profile engine generates tokens (the array
+    backend realizes the faults without breaking the serve loop)."""
+    params, cfg = setup
+    eng = build_engine(params, cfg,
+                       ServeOptions(paged=True, slots=1, max_len=32,
+                                    block_size=4, prefill_chunk=4,
+                                    fault_profile="tiny"))
+    eng.submit(Request(rid=0, prompt=[5, 9, 17, 3], max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].generated) == 3
+
+
+# ---------------------------------------------------------------------------
+# Deprecation contract: direct construction warns, build_engine doesn't
+# ---------------------------------------------------------------------------
+
+
+def test_direct_constructors_warn(setup):
+    params, cfg = setup
+    with pytest.warns(DeprecationWarning, match="build_engine"):
+        ServingEngine(params, cfg, ServeConfig(slots=1, max_len=16))
+    with pytest.warns(DeprecationWarning, match="build_engine"):
+        PagedServingEngine(params, cfg,
+                           PagedServeConfig(slots=1, max_len=16,
+                                            block_size=4))
+
+
+def test_build_engine_is_warning_free(setup):
+    params, cfg = setup
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        build_engine(params, cfg, ServeOptions(slots=1, max_len=16))

@@ -50,6 +50,10 @@ Per-metric tolerance classes (suffix-matched on the leaf key):
 * ``workload/...``        — benchmark *configuration*: exact regardless
                             of suffix (a changed workload is a changed
                             benchmark, not a measurement);
+* ``*_errors_total``      — modeled fault censuses (device bit errors,
+                            engine error ticks): exact, checked before
+                            the generic counter rule so a drift names
+                            the fault model, not the workload;
 * ``*_total`` / ``*_count`` — lifecycle counters exported from the
                             ``repro.obs`` registries (label suffixes like
                             ``{kind=decode}`` are stripped first): exact —
@@ -108,6 +112,11 @@ def classify(path: str) -> str:
         return "rate"
     if key.endswith("_acc"):
         return "acc"
+    if key.endswith("_errors_total"):
+        # modeled fault censuses (arch_bit_errors_total, serve_errors_
+        # total): exact like counters, but named separately so a drift
+        # reads as "the device fault model changed", not runner noise
+        return "errors"
     if key.endswith("_total") or key.endswith("_count"):
         return "counter"
     if "speedup" in key or key.endswith("tokens_per_s"):
@@ -140,6 +149,15 @@ def _check_leaf(path, base, cur, *, wall_tolerance, ratio_floor,
                 acc_tolerance=ACC_TOLERANCE):
     rule = classify(path)
     if rule == "ignore":
+        return None
+    if rule == "errors":
+        # fault censuses are frozen-map exact: the DeviceProfile pins the
+        # per-cell draw, so ANY drift means the fault model moved
+        if cur != base:
+            return (
+                f"{path}: {cur!r} != baseline {base!r} "
+                "(modeled error census changed)"
+            )
         return None
     if rule == "counter":
         # registry counters: exact (the benches only export ones that are

@@ -28,10 +28,11 @@ FENCE_RE = re.compile(r"^```(\w*)\s*$")
 LINK_FILES = ["README.md", "docs/paper_map.md", "docs/backends.md",
               "docs/scaling.md", "docs/serving.md", "docs/kernels.md",
               "docs/observability.md", "docs/prefix_caching.md",
-              "docs/model_zoo.md"]
+              "docs/model_zoo.md", "docs/reliability.md"]
 # Files whose ```python blocks are executed.
 SNIPPET_FILES = ["docs/backends.md", "docs/scaling.md",
-                 "docs/prefix_caching.md", "docs/model_zoo.md"]
+                 "docs/prefix_caching.md", "docs/model_zoo.md",
+                 "docs/reliability.md"]
 
 
 def check_links(relpath: str) -> list[str]:
